@@ -1,0 +1,16 @@
+"""Paper Appendix A.3 (Figure 9): VKMC with k=5 centers."""
+
+from __future__ import annotations
+
+from benchmarks.vkmc_main import run as run_vkmc
+
+BENCH = "centers_k5"
+
+
+def run(fast: bool = True):
+    return run_vkmc(fast, k=5, bench=BENCH)
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

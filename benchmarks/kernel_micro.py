@@ -1,0 +1,69 @@
+"""Kernel microbenchmarks: us/call for each Pallas hot-spot vs its jnp
+reference (CPU interpret mode here — wall numbers are for relative tracking
+only; the BlockSpec analysis in EXPERIMENTS.md covers the TPU target)."""
+
+from __future__ import annotations
+
+import time
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import kmeans_assign as _ka
+from repro.kernels import leverage as _lev
+from repro.kernels import ref
+from repro.kernels import weighted_gram as _wg
+from benchmarks.common import write_rows
+
+BENCH = "kernel_micro"
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(fast: bool = True):
+    n, d, k = (20000, 90, 10) if fast else (200000, 90, 10)
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (n, d))
+    C = jax.random.normal(jax.random.fold_in(key, 1), (k, d))
+    M = jnp.eye(d) * 0.5
+    w = jax.random.uniform(jax.random.fold_in(key, 2), (n,))
+
+    jit_ref_ka = jax.jit(ref.kmeans_assign)
+    jit_ref_lev = jax.jit(ref.leverage)
+    jit_ref_wg = jax.jit(ref.weighted_gram)
+
+    interp = jax.default_backend() != "tpu"
+    pl_ka = functools.partial(_ka.kmeans_assign, interpret=interp)
+    pl_lev = functools.partial(_lev.leverage, interpret=interp)
+    pl_wg = functools.partial(_wg.weighted_gram, interpret=interp)
+    suffix = "pallas-interp" if interp else "pallas"
+    rows = []
+    for name, fn, args in [
+        (f"kmeans_assign/{suffix}", pl_ka, (X, C)),
+        ("kmeans_assign/jnp-ref", jit_ref_ka, (X, C)),
+        (f"leverage/{suffix}", pl_lev, (X, M)),
+        ("leverage/jnp-ref", jit_ref_lev, (X, M)),
+        (f"weighted_gram/{suffix}", pl_wg, (X, w)),
+        ("weighted_gram/jnp-ref", jit_ref_wg, (X, w)),
+    ]:
+        us = _time(fn, *args)
+        rows.append({"bench": BENCH, "method": name, "size": n,
+                     "cost_mean": round(us, 1), "cost_std": 0.0,
+                     "comm": 0, "wall_s": round(us / 1e6, 4)})
+    write_rows(BENCH, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

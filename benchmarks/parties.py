@@ -1,0 +1,48 @@
+"""Paper Appendix A.1 (Figures 4/5): T=5 parties (18 features each)."""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    SIZES,
+    make_vkmc_data,
+    make_vrlr_data,
+    run_vkmc_method,
+    run_vrlr_method,
+    sweep,
+    write_rows,
+)
+
+BENCH = "parties_T5"
+
+
+def run(fast: bool = True):
+    repeats = 3 if fast else 20
+    rows = []
+    train, test = make_vrlr_data(fast, T=5)
+    base = run_vrlr_method("central", None, 0, train, test, seed=0)
+    rows.append({"bench": BENCH, "method": "CENTRAL", "size": train.n,
+                 "cost_mean": base["cost"], "cost_std": 0.0,
+                 "comm": base["comm"], "wall_s": base["wall_s"]})
+    for sampling, tag in (("coreset", "C"), ("uniform", "U")):
+        for row in sweep(lambda m, r: run_vrlr_method(
+                "central", sampling, m, train, test, seed=31 * r + m),
+                SIZES[:4], repeats):
+            rows.append({"bench": BENCH, "method": f"{tag}-CENTRAL", **row})
+
+    ds = make_vkmc_data(fast, T=5)
+    base = run_vkmc_method("kmeanspp", None, 0, ds, 10, seed=0)
+    rows.append({"bench": BENCH, "method": "KMEANS++", "size": ds.n,
+                 "cost_mean": base["cost"], "cost_std": 0.0,
+                 "comm": base["comm"], "wall_s": base["wall_s"]})
+    for sampling, tag in (("coreset", "C"), ("uniform", "U")):
+        for row in sweep(lambda m, r: run_vkmc_method(
+                "kmeanspp", sampling, m, ds, 10, seed=77 * r + m),
+                SIZES[:4], repeats):
+            rows.append({"bench": BENCH, "method": f"{tag}-KMEANS++", **row})
+    write_rows(BENCH, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,32 @@
+"""Paper Appendix A.2 (Figures 6-8): plain linear regression, Lasso
+(R = 2n|th|_1) and elastic net (R = 2n|th|_1 + n|th|_2^2) — C-/U-CENTRAL
+vs CENTRAL (no SAGA for the prox problems, as in the paper)."""
+
+from __future__ import annotations
+
+from benchmarks.common import SIZES, make_vrlr_data, run_vrlr_method, sweep, write_rows
+
+BENCH = "regularizers"
+
+
+def run(fast: bool = True):
+    repeats = 3 if fast else 20
+    train, test = make_vrlr_data(fast)
+    rows = []
+    for reg in ("linear", "lasso", "elastic"):
+        base = run_vrlr_method("central", None, 0, train, test, seed=0, reg_kind=reg)
+        rows.append({"bench": BENCH, "method": f"CENTRAL[{reg}]", "size": train.n,
+                     "cost_mean": base["cost"], "cost_std": 0.0,
+                     "comm": base["comm"], "wall_s": base["wall_s"]})
+        for sampling, tag in (("coreset", "C"), ("uniform", "U")):
+            for row in sweep(lambda m, r: run_vrlr_method(
+                    "central", sampling, m, train, test,
+                    seed=13 * r + m, reg_kind=reg), SIZES[:4], repeats):
+                rows.append({"bench": BENCH, "method": f"{tag}-CENTRAL[{reg}]", **row})
+    write_rows(BENCH, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

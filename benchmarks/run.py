@@ -1,0 +1,69 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+Prints the harness CSV ``name,us_per_call,derived`` (one line per method
+cell; us_per_call = method wall time; derived = "cost=<avg loss>
+comm=<units>") and writes the full per-bench CSVs to
+benchmarks/artifacts/.
+
+  PYTHONPATH=src python -m benchmarks.run           # fast (CPU-budget) sizes
+  PYTHONPATH=src python -m benchmarks.run --full    # paper-scale n / repeats
+  PYTHONPATH=src python -m benchmarks.run --only vrlr_main,kernel_micro
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+# The paper benchmarks measure LOSS and COMMUNICATION, not kernel wall time;
+# on this CPU container the Pallas kernels run in interpret mode (~20x slower
+# than compiled jnp, semantically identical — tests/test_kernels.py proves
+# it), so route the hot loops to the jnp references. kernel_micro bypasses
+# this and times the kernels explicitly.
+os.environ.setdefault("REPRO_NO_PALLAS", "1")
+
+MODULES = [
+    "vrlr_main",        # Table 1 left / Fig 2
+    "vkmc_main",        # Table 1 right / Fig 3
+    "parties",          # Fig 4/5 (T=5)
+    "regularizers",     # Fig 6-8 (linear / lasso / elastic)
+    "centers",          # Fig 9 (k=5)
+    "second_dataset",   # Fig 10/11 (KC-House profile)
+    "kernel_micro",     # Pallas kernel us/call
+    "selector_step",    # beyond-paper: LLM coreset batch selection
+    "assumption_sweep",  # beyond-paper: Assumption 4.1/5.1 violation sweep
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--only", default=None, help="comma-separated module list")
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            rows = mod.run(fast=not args.full)
+            for r in rows:
+                label = f"{r['bench']}/{r['method']}({r['size']})"
+                us = r["wall_s"] * 1e6
+                derived = f"cost={r['cost_mean']:.4g} comm={r['comm']}"
+                print(f"{label},{us:.0f},{derived}")
+        except Exception as e:  # keep the suite going; report at the end
+            failures += 1
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", file=sys.stdout)
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} finished in {time.time()-t0:.1f}s", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

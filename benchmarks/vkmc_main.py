@@ -1,0 +1,38 @@
+"""Paper Table 1 (right) / Figure 3: VKMC with k=10 on the standardized
+YearPrediction-profile dataset, T=3 parties.
+
+Grid: KMEANS++, DISTDIM (full data) vs C-/U-{KMEANS++, DISTDIM} over coreset
+sizes 1000..6000, reporting training cost + communication complexity.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import SIZES, make_vkmc_data, run_vkmc_method, sweep, write_rows
+
+BENCH = "vkmc_main"
+
+
+def run(fast: bool = True, k: int = 10, T: int = 3, dataset: str = "yearpred",
+        bench: str = BENCH):
+    repeats = 3 if fast else 20
+    ds = make_vkmc_data(fast, T=T, dataset=dataset)
+    rows = []
+    for method in ("kmeanspp", "distdim"):
+        base = run_vkmc_method(method, None, 0, ds, k, seed=0)
+        rows.append({"bench": bench, "method": method.upper(), "size": ds.n,
+                     "cost_mean": base["cost"], "cost_std": 0.0,
+                     "comm": base["comm"], "wall_s": base["wall_s"]})
+        for sampling, tag in (("coreset", "C"), ("uniform", "U")):
+            sw = sweep(lambda m, r: run_vkmc_method(
+                method, sampling, m, ds, k, seed=2000 * r + m),
+                SIZES, repeats)
+            for row in sw:
+                rows.append({"bench": bench, "method": f"{tag}-{method.upper()}",
+                             **row})
+    write_rows(bench, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

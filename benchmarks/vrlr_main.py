@@ -1,0 +1,46 @@
+"""Paper Table 1 (left) / Figure 2: VRLR (ridge, lambda=0.1n) on the
+YearPrediction-profile dataset, T=3 parties.
+
+Grid: CENTRAL, SAGA (full data) vs C-/U-{CENTRAL, SAGA} over coreset sizes
+1000..6000, reporting testing loss + communication complexity.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    SIZES,
+    make_vrlr_data,
+    run_vrlr_method,
+    sweep,
+    write_rows,
+)
+
+BENCH = "vrlr_main"
+
+
+def run(fast: bool = True):
+    repeats = 3 if fast else 20
+    train, test = make_vrlr_data(fast)
+    rows = []
+
+    for method in ("central", "saga"):
+        # full-data baseline (1 repeat — deterministic / expensive)
+        base = run_vrlr_method(method, None, 0, train, test, seed=0,
+                               saga_steps=20000 if fast else 100000)
+        rows.append({"bench": BENCH, "method": method.upper(), "size": train.n,
+                     "cost_mean": base["cost"], "cost_std": 0.0,
+                     "comm": base["comm"], "wall_s": base["wall_s"]})
+        for sampling, tag in (("coreset", "C"), ("uniform", "U")):
+            sw = sweep(lambda m, r: run_vrlr_method(
+                method, sampling, m, train, test, seed=1000 * r + m),
+                SIZES, repeats)
+            for row in sw:
+                rows.append({"bench": BENCH, "method": f"{tag}-{method.upper()}",
+                             **row})
+    write_rows(BENCH, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

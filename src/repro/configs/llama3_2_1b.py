@@ -1,0 +1,23 @@
+"""llama3.2-1b [dense] — 16L d_model=2048 32H (GQA kv=8) d_ff=8192
+vocab=128256.  [hf:meta-llama/Llama-3.2-1B]
+"""
+
+from repro.configs.base import ArchConfig, arch_registry
+
+
+@arch_registry.register("llama3.2-1b")
+def llama3_2_1b() -> ArchConfig:
+    return ArchConfig(
+        name="llama3.2-1b",
+        family="dense",
+        source="hf:meta-llama/Llama-3.2-1B",
+        num_layers=16,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=128256,
+        rope_theta=500000.0,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,47 @@
+"""The paper's primary contribution: communication-efficient coreset
+construction for vertical federated learning.
+
+Public API:
+  VFLDataset, split_columns, standardize          (vfl)
+  CommLedger, theoretical_dis_cost                (comm)
+  dis_sample, uniform_sample, dis_marginals       (dis — Algorithm 1)
+  vrlr_local_scores, vkmc_local_scores, ...       (sensitivity — Alg 2/3 local)
+  build_vrlr_coreset, build_vkmc_coreset, Coreset (coreset — Alg 2/3 e2e)
+  ridge_closed_form, fista, saga_ridge, solve     (vrlr solvers)
+  kmeans, kmeans_plusplus, lloyd, distdim, ...    (vkmc solvers)
+  CoresetBatchSelector                            (selector — LLM integration)
+"""
+
+from repro.core.comm import CommLedger, theoretical_dis_cost
+from repro.core.coreset import (
+    Coreset,
+    build_uniform_coreset,
+    build_vkmc_coreset,
+    build_vrlr_coreset,
+    vkmc_coreset_ratio,
+    vrlr_coreset_ratio,
+)
+from repro.core.dis import dis_marginals, dis_sample, uniform_sample
+from repro.core.sensitivity import (
+    kmeans_assignment,
+    leverage_scores,
+    total_sensitivity_bound_vkmc,
+    total_sensitivity_bound_vrlr,
+    vkmc_local_scores,
+    vrlr_local_scores,
+)
+from repro.core.vfl import VFLDataset, split_columns, standardize
+from repro.core.vkmc import distdim, kmeans, kmeans_cost, kmeans_plusplus, lloyd
+from repro.core.vrlr import (
+    central_comm_cost,
+    elastic_cost,
+    fista,
+    lasso_cost,
+    ridge_closed_form,
+    ridge_cost,
+    saga_ridge,
+    solve,
+    sq_loss,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

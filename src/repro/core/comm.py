@@ -1,0 +1,92 @@
+"""Communication accounting for the VFL model of the paper.
+
+The paper (Section 2) counts one unit per transported integer/float, so a
+d-dimensional vector costs d units.  Every protocol in ``repro.core`` takes an
+optional :class:`CommLedger` and records each message with its direction and
+round, so benchmarks can reproduce the paper's communication-complexity
+columns exactly (Table 1 "Com. compl.").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class Message:
+    """One logical message in the star topology (server <-> party)."""
+
+    tag: str          # e.g. "dis/round1/G_j"
+    src: str          # "server" or "party:<j>"
+    dst: str
+    units: int        # floats/ints transported
+
+
+class CommLedger:
+    """Unit-accounting ledger for server<->party communication.
+
+    Only server<->party links exist (paper Section 2 / Figure 1a); any
+    party<->party exchange must be relayed and is recorded as two messages.
+    """
+
+    def __init__(self) -> None:
+        self.messages: List[Message] = []
+        self._by_tag: Dict[str, int] = defaultdict(int)
+
+    def send(self, tag: str, src: str, dst: str, units: int) -> None:
+        if units < 0:
+            raise ValueError(f"negative units for {tag}: {units}")
+        self.messages.append(Message(tag, src, dst, int(units)))
+        self._by_tag[tag] += int(units)
+
+    # -- convenience wrappers ------------------------------------------------
+    def party_to_server(self, tag: str, party: int, units: int) -> None:
+        self.send(tag, f"party:{party}", "server", units)
+
+    def server_to_party(self, tag: str, party: int, units: int) -> None:
+        self.send(tag, "server", f"party:{party}", units)
+
+    def broadcast(self, tag: str, n_parties: int, units_each: int) -> None:
+        for j in range(n_parties):
+            self.server_to_party(tag, j, units_each)
+
+    # -- queries ---------------------------------------------------------------
+    @property
+    def total(self) -> int:
+        return sum(m.units for m in self.messages)
+
+    def by_tag(self) -> Dict[str, int]:
+        return dict(self._by_tag)
+
+    def by_prefix(self, prefix: str) -> int:
+        return sum(u for t, u in self._by_tag.items() if t.startswith(prefix))
+
+    def fork(self) -> "CommLedger":
+        """Fresh ledger (used to isolate a sub-protocol's cost)."""
+        return CommLedger()
+
+    def merge(self, other: "CommLedger") -> None:
+        for m in other.messages:
+            self.send(m.tag, m.src, m.dst, m.units)
+
+    def summary(self) -> str:
+        lines = [f"total={self.total}"]
+        for tag in sorted(self._by_tag):
+            lines.append(f"  {tag}: {self._by_tag[tag]}")
+        return "\n".join(lines)
+
+
+def theoretical_dis_cost(m: int, T: int) -> Tuple[int, int]:
+    """(lower, upper) unit bounds for Algorithm 1 given m samples, T parties.
+
+    Round 1: T (G_j up) + T (a_j down); round 2: <=m (indices up) + m*T
+    (S broadcast); round 3: m*T (scores up).  Total in [2T + 2m, 2T + m + 2mT].
+    """
+    return 2 * T + 2 * m, 2 * T + m + 2 * m * T
+
+
+def null_ledger(ledger: Optional[CommLedger]) -> CommLedger:
+    """Allow ``ledger=None`` call sites without branching everywhere."""
+    return ledger if ledger is not None else CommLedger()

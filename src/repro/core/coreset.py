@@ -1,0 +1,141 @@
+"""High-level coreset builders: Algorithms 2 and 3 end-to-end.
+
+These glue the party-local scores (:mod:`repro.core.sensitivity`) to the DIS
+meta-scheme (:mod:`repro.core.dis`) and return `(S, w)` plus the exact
+communication bill.  When the data assumptions (4.1 / 5.1) fail, the SAME
+code paths return the (beta, eps)-robust coresets of Remarks 4.3 / 5.3 —
+robustness is a property of the guarantee, not of the algorithm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sensitivity
+from repro.core.comm import CommLedger, null_ledger
+from repro.core.dis import dis_sample, uniform_sample
+from repro.core.vfl import VFLDataset
+from repro.core.vkmc import kmeans
+
+
+@dataclasses.dataclass
+class Coreset:
+    """Index coreset: indices into the original rows + importance weights.
+
+    Per Problem 1, the coreset is indices/weights — never raw rows — so the
+    construction itself moves no feature data across parties.
+    """
+
+    indices: jax.Array   # (m,) int
+    weights: jax.Array   # (m,) float
+    comm_units: int      # construction cost in paper units
+
+    @property
+    def m(self) -> int:
+        return int(self.indices.shape[0])
+
+    def materialize(self, ds: VFLDataset) -> Tuple[jax.Array, Optional[jax.Array], jax.Array]:
+        """(X_S, y_S, w) on the server — costs 2mT more units when the
+        downstream solver needs raw rows (Theorem 2.5's `+2mT` term)."""
+        sub = ds.rows(self.indices)
+        return sub.full(), sub.y, self.weights
+
+
+def build_vrlr_coreset(
+    key: jax.Array,
+    ds: VFLDataset,
+    m: int,
+    ledger: Optional[CommLedger] = None,
+    use_kernel: bool = True,
+) -> Coreset:
+    """Algorithm 2: per-party ridge-leverage scores + DIS."""
+    led = null_ledger(ledger)
+    if ds.y is None:
+        raise ValueError("VRLR requires labels at party T")
+    scores: List[jax.Array] = []
+    for j, Xj in enumerate(ds.parts):
+        y = ds.y if j == ds.T - 1 else None            # party T appends labels
+        scores.append(sensitivity.vrlr_local_scores(Xj, y, use_kernel=use_kernel))
+    S, w = dis_sample(key, scores, m, led)
+    return Coreset(S, w, led.total)
+
+
+def build_vkmc_coreset(
+    key: jax.Array,
+    ds: VFLDataset,
+    k: int,
+    m: int,
+    alpha: float = 2.0,
+    local_iters: int = 15,
+    ledger: Optional[CommLedger] = None,
+    use_kernel: bool = True,
+) -> Coreset:
+    """Algorithm 3: local alpha-approx k-means -> local sensitivities -> DIS.
+
+    ``alpha`` is the approximation factor credited to the local solver
+    (k-means++ + Lloyd is O(log k) in theory, ~2 in practice).
+    """
+    led = null_ledger(ledger)
+    scores: List[jax.Array] = []
+    for j, Xj in enumerate(ds.parts):
+        key, sub = jax.random.split(key)
+        local_c = kmeans(sub, Xj, k, iters=local_iters, use_kernel=use_kernel)
+        scores.append(sensitivity.vkmc_local_scores(Xj, local_c, alpha, use_kernel=use_kernel))
+    key, sub = jax.random.split(key)
+    S, w = dis_sample(sub, scores, m, led)
+    return Coreset(S, w, led.total)
+
+
+def build_uniform_coreset(
+    key: jax.Array,
+    ds: VFLDataset,
+    m: int,
+    ledger: Optional[CommLedger] = None,
+) -> Coreset:
+    """The U-* baseline: uniform indices, weight n/m."""
+    led = null_ledger(ledger)
+    S, w = uniform_sample(key, ds.n, m, ds.T, led)
+    return Coreset(S, w, led.total)
+
+
+# --------------------------------------------------------------------------
+# Offline coreset quality evaluation (used by tests / EXPERIMENTS.md)
+# --------------------------------------------------------------------------
+
+def vrlr_coreset_ratio(
+    ds: VFLDataset, cs: Coreset, thetas: jax.Array, lam: float
+) -> jax.Array:
+    """max_theta |cost^R(S,theta)/cost^R(X,theta) - 1| over a probe set of
+    thetas (empirical epsilon; Definition 2.3)."""
+    X, y = ds.full(), ds.y
+    XS, yS, w = cs.materialize(ds)
+
+    def ratio(theta):
+        reg = lam * jnp.sum(theta * theta)
+        full = jnp.sum((X @ theta - y) ** 2) + reg
+        sub = jnp.sum(w * (XS @ theta - yS) ** 2) + reg
+        return jnp.abs(sub / full - 1.0)
+
+    return jnp.max(jax.vmap(ratio)(thetas))
+
+
+def vkmc_coreset_ratio(ds: VFLDataset, cs: Coreset, center_sets: jax.Array) -> jax.Array:
+    """max_C |cost^C(S,C)/cost^C(X,C) - 1| over probe center sets
+    (empirical epsilon; Definition 2.4)."""
+    X = ds.full()
+    XS, _, w = cs.materialize(ds)
+
+    def ratio(C):
+        d2_full = jnp.min(
+            jnp.sum((X[:, None, :] - C[None, :, :]) ** 2, axis=-1), axis=1
+        ).sum()
+        d2_sub = (
+            w * jnp.min(jnp.sum((XS[:, None, :] - C[None, :, :]) ** 2, axis=-1), axis=1)
+        ).sum()
+        return jnp.abs(d2_sub / d2_full - 1.0)
+
+    return jnp.max(jax.vmap(ratio)(center_sets))

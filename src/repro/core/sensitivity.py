@@ -1,0 +1,111 @@
+"""Party-local sensitivity scores — the per-problem halves of Algorithms 2
+(VRLR) and 3 (VKMC).
+
+Everything here is computed from ONE party's block `X^(j)` only; the
+cross-party combination happens inside DIS (Algorithm 1).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2: VRLR leverage scores
+# --------------------------------------------------------------------------
+
+def leverage_scores(Xj: jax.Array, rcond: float = 1e-6, use_kernel: bool = True) -> jax.Array:
+    """Row leverage scores ||u_i^(j)||^2 of the orthonormal basis U^(j) of
+    col(X^(j)).
+
+    Computed Gram-side: lev_i = x_i^T (X^T X)^+ x_i, which equals the QR-row
+    norm but costs O(n d^2 + d^3) instead of an n x d QR, and whose O(n d^2)
+    inner loop is the Pallas ``leverage`` kernel (row-wise quadratic form).
+    Handles rank deficiency via eigen-pseudo-inverse.
+    """
+    Xj = jnp.asarray(Xj)
+    n, dj = Xj.shape
+    G = Xj.T @ Xj                                   # (d_j, d_j)
+    evals, evecs = jnp.linalg.eigh(G)
+    cutoff = rcond * jnp.maximum(evals.max(), 0.0)
+    inv = jnp.where(evals > cutoff, 1.0 / jnp.maximum(evals, 1e-30), 0.0)
+    M = (evecs * inv[None, :]) @ evecs.T            # pseudo-inverse of Gram
+    if use_kernel:
+        lev = kops.leverage(Xj, M)                  # row-wise x_i^T M x_i
+    else:
+        lev = jnp.einsum("nd,de,ne->n", Xj, M, Xj)
+    # numerical clamp: true leverage lies in [0, 1]
+    return jnp.clip(lev, 0.0, 1.0)
+
+
+def vrlr_local_scores(
+    Xj: jax.Array, y: Optional[jax.Array] = None, use_kernel: bool = True
+) -> jax.Array:
+    """Algorithm 2 lines 2-3: g_i^(j) = ||u_i^(j)||^2 + 1/n.
+
+    Party T passes its labels: the basis is taken over [X^(T), y].
+    """
+    if y is not None:
+        Xj = jnp.concatenate([Xj, y[:, None]], axis=1)
+    n = Xj.shape[0]
+    return leverage_scores(Xj, use_kernel=use_kernel) + 1.0 / n
+
+
+# --------------------------------------------------------------------------
+# Algorithm 3: VKMC local sensitivities
+# --------------------------------------------------------------------------
+
+def kmeans_assignment(
+    Xj: jax.Array, centers: jax.Array, use_kernel: bool = True
+) -> Tuple[jax.Array, jax.Array]:
+    """(argmin_l d(x_i, c_l), min_l d(x_i, c_l)^2) — the O(nkd) hot loop,
+    served by the Pallas ``kmeans_assign`` kernel."""
+    if use_kernel:
+        return kops.kmeans_assign(Xj, centers)
+    d2 = (
+        jnp.sum(Xj * Xj, axis=1, keepdims=True)
+        - 2.0 * Xj @ centers.T
+        + jnp.sum(centers * centers, axis=1)[None, :]
+    )
+    d2 = jnp.maximum(d2, 0.0)
+    return jnp.argmin(d2, axis=1), jnp.min(d2, axis=1)
+
+
+def vkmc_local_scores(
+    Xj: jax.Array,
+    centers: jax.Array,
+    alpha: float,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Algorithm 3 lines 3-11 for one party.
+
+    g_i^(j) = alpha*d(x_i, c_pi(i))^2 / cost
+            + alpha * (sum_{i' in B_pi(i)} d(x_i', c_pi(i'))^2) / (|B_pi(i)| * cost)
+            + 2*alpha / |B_pi(i)|
+    """
+    n = Xj.shape[0]
+    k = centers.shape[0]
+    assign, d2 = kmeans_assignment(Xj, centers, use_kernel=use_kernel)
+    cost = jnp.maximum(d2.sum(), 1e-30)
+    cluster_cost = jax.ops.segment_sum(d2, assign, num_segments=k)       # (k,)
+    cluster_size = jax.ops.segment_sum(jnp.ones((n,)), assign, num_segments=k)
+    cluster_size = jnp.maximum(cluster_size, 1.0)
+    term1 = alpha * d2 / cost
+    term2 = alpha * cluster_cost[assign] / (cluster_size[assign] * cost)
+    term3 = 2.0 * alpha / cluster_size[assign]
+    return term1 + term2 + term3
+
+
+def total_sensitivity_bound_vrlr(dims, T: int) -> float:
+    """Thm 4.2: G = sum_j d'_j + T <= d + T + 1 (used by tests)."""
+    return float(sum(dims) + T)
+
+
+def total_sensitivity_bound_vkmc(k: int, T: int, alpha: float) -> float:
+    """Lemma F.2: G = 2(k+1) * alpha * T exactly (used by tests)."""
+    return 2.0 * (k + 1) * alpha * T

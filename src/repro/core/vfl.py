@@ -1,0 +1,92 @@
+"""Vertical-federated dataset model: one dataset, feature columns split
+across T parties; labels (if any) live at party T-1 (0-indexed; paper's
+"party T").
+
+This is the faithful, protocol-level simulation substrate used by the
+paper-reproduction benchmarks.  The mesh/shard_map execution of the same
+geometry (model axis = party axis) lives in :mod:`repro.core.selector`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def split_columns(d: int, T: int, sizes: Optional[Sequence[int]] = None) -> List[slice]:
+    """Column slices for T parties. ``sizes`` overrides the near-even split."""
+    if sizes is None:
+        base, rem = divmod(d, T)
+        sizes = [base + (1 if j < rem else 0) for j in range(T)]
+    if len(sizes) != T or sum(sizes) != d:
+        raise ValueError(f"bad sizes {sizes} for d={d}, T={T}")
+    out, start = [], 0
+    for s in sizes:
+        out.append(slice(start, start + s))
+        start += s
+    return out
+
+
+@dataclasses.dataclass
+class VFLDataset:
+    """X (n, d) vertically partitioned; y optional, held by the last party."""
+
+    parts: List[jnp.ndarray]            # party j's local block (n, d_j)
+    y: Optional[jnp.ndarray] = None     # (n,), stored at party T-1
+
+    def __post_init__(self) -> None:
+        n = self.parts[0].shape[0]
+        for j, p in enumerate(self.parts):
+            if p.ndim != 2 or p.shape[0] != n:
+                raise ValueError(f"party {j}: bad shape {p.shape}")
+        if self.y is not None and self.y.shape[0] != n:
+            raise ValueError("label length mismatch")
+
+    @property
+    def n(self) -> int:
+        return int(self.parts[0].shape[0])
+
+    @property
+    def T(self) -> int:
+        return len(self.parts)
+
+    @property
+    def d(self) -> int:
+        return int(sum(p.shape[1] for p in self.parts))
+
+    @property
+    def dims(self) -> Tuple[int, ...]:
+        return tuple(int(p.shape[1]) for p in self.parts)
+
+    def full(self) -> jnp.ndarray:
+        """Server-side concatenation — ONLY for evaluation/tests, never used
+        inside communication-accounted protocols."""
+        return jnp.concatenate(self.parts, axis=1)
+
+    def rows(self, idx: jnp.ndarray) -> "VFLDataset":
+        y = None if self.y is None else self.y[idx]
+        return VFLDataset([p[idx] for p in self.parts], y)
+
+    @staticmethod
+    def from_dense(X, y=None, T: int = 3, sizes: Optional[Sequence[int]] = None) -> "VFLDataset":
+        X = jnp.asarray(X)
+        slices = split_columns(X.shape[1], T, sizes)
+        return VFLDataset([X[:, s] for s in slices], None if y is None else jnp.asarray(y))
+
+
+def standardize(ds: VFLDataset, eps: float = 1e-8) -> VFLDataset:
+    """Per-feature mean-0 / std-1 normalisation, computed party-locally
+    (no cross-party stats needed — matches the paper's preprocessing)."""
+    parts = []
+    for p in ds.parts:
+        mu = p.mean(axis=0, keepdims=True)
+        sd = p.std(axis=0, keepdims=True)
+        parts.append((p - mu) / jnp.maximum(sd, eps))
+    return VFLDataset(parts, ds.y)
+
+
+def as_numpy(ds: VFLDataset) -> Tuple[List[np.ndarray], Optional[np.ndarray]]:
+    return [np.asarray(p) for p in ds.parts], (None if ds.y is None else np.asarray(ds.y))

@@ -1,0 +1,14 @@
+from repro.data.synthetic import (
+    correlated_vfl_data,
+    kc_house_like,
+    year_prediction_like,
+)
+from repro.data.lm import TokenStream, lm_batch
+
+__all__ = [
+    "year_prediction_like",
+    "kc_house_like",
+    "correlated_vfl_data",
+    "TokenStream",
+    "lm_batch",
+]

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   kmeans_assign  — blocked n x k distance + argmin (Algorithm 3 / Lloyd)
+#   leverage       — row-wise quadratic form x_i^T M x_i (Algorithm 2)
+#   weighted_gram  — X^T diag(w) X accumulation (coreset ridge solve)
+# Each <name>.py holds the pl.pallas_call + BlockSpec; ops.py is the jit'd
+# dispatch layer; ref.py the pure-jnp oracles.

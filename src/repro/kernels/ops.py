@@ -1,0 +1,49 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On a TPU backend the kernels compile natively; on CPU (this container) they
+execute under ``interpret=True`` — the kernel bodies run in Python with the
+exact same tiling/masking logic, which is what the allclose tests validate
+against the ``ref.py`` oracles.
+
+Set ``REPRO_NO_PALLAS=1`` to route everything to the jnp references (used to
+A/B the kernels and as an escape hatch inside traced code where pallas
+interpret mode would be too slow, e.g. hypothesis sweeps with huge n).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+
+from repro.kernels import kmeans_assign as _ka
+from repro.kernels import leverage as _lev
+from repro.kernels import ref
+from repro.kernels import weighted_gram as _wg
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _disabled() -> bool:
+    return os.environ.get("REPRO_NO_PALLAS", "0") == "1"
+
+
+def kmeans_assign(X: jax.Array, C: jax.Array, *, block_n: int = 256) -> Tuple[jax.Array, jax.Array]:
+    if _disabled():
+        return ref.kmeans_assign(X, C)
+    return _ka.kmeans_assign(X, C, block_n=block_n, interpret=_interpret())
+
+
+def leverage(X: jax.Array, M: jax.Array, *, block_n: int = 512) -> jax.Array:
+    if _disabled():
+        return ref.leverage(X, M)
+    return _lev.leverage(X, M, block_n=block_n, interpret=_interpret())
+
+
+def weighted_gram(X: jax.Array, w: jax.Array, *, block_n: int = 512) -> jax.Array:
+    if _disabled():
+        return ref.weighted_gram(X, w)
+    return _wg.weighted_gram(X, w, block_n=block_n, interpret=_interpret())

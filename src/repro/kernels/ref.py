@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth; kernel tests sweep shapes/dtypes
+and ``assert_allclose`` the Pallas output (interpret mode on CPU) against
+these.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign(X: jax.Array, C: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(argmin_l ||x_i - c_l||^2, min_l ||x_i - c_l||^2).
+
+    X: (n, d) float; C: (k, d) float.  Returns (int32 (n,), float32 (n,)).
+    """
+    x2 = jnp.sum(X.astype(jnp.float32) ** 2, axis=1, keepdims=True)        # (n, 1)
+    c2 = jnp.sum(C.astype(jnp.float32) ** 2, axis=1)[None, :]              # (1, k)
+    xc = X.astype(jnp.float32) @ C.astype(jnp.float32).T                   # (n, k)
+    d2 = jnp.maximum(x2 + c2 - 2.0 * xc, 0.0)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)
+
+
+def leverage(X: jax.Array, M: jax.Array) -> jax.Array:
+    """Row-wise quadratic form x_i^T M x_i.  X: (n, d); M: (d, d) symmetric."""
+    Xf = X.astype(jnp.float32)
+    Mf = M.astype(jnp.float32)
+    return jnp.einsum("nd,de,ne->n", Xf, Mf, Xf)
+
+
+def weighted_gram(X: jax.Array, w: jax.Array) -> jax.Array:
+    """X^T diag(w) X.  X: (n, d); w: (n,).  Returns (d, d) float32."""
+    Xf = X.astype(jnp.float32)
+    return (Xf * w.astype(jnp.float32)[:, None]).T @ Xf

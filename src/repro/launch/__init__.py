@@ -1,0 +1,5 @@
+# Launchers: mesh.py (production mesh builders), dryrun.py (512-device
+# lower+compile + roofline extraction), hillclimb.py (§Perf driver),
+# train.py (training driver), hlo.py (collective parsing), roofline.py
+# (three-term model).  dryrun/hillclimb must be the process entry point
+# (they set XLA_FLAGS before importing jax).

@@ -1,0 +1,355 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) against the
+production mesh, prove it fits (memory_analysis), and extract the roofline
+terms (cost_analysis + HLO collective parse).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all                 # 16x16
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod     # 2x16x16
+
+Results are appended as JSON lines to ``--out`` (default
+benchmarks/artifacts/dryrun.jsonl) — EXPERIMENTS.md §Dry-run/§Roofline read
+from there.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, all_arch_names, get_arch
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch import hlo as hlo_mod
+from repro.launch import roofline as rf
+from repro.launch.inputs import cache_specs, input_specs, prefill_specs, state_specs
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import api as model_api
+from repro.optim.schedules import constant
+from repro.serve.engine import make_serve_step
+from repro.sharding.ctx import ShardingCtx, set_ctx
+from repro.sharding.specs import batch_shardings, cache_shardings, param_shardings
+from repro.train.trainer import make_train_step
+from repro.utils.logging import get_logger
+
+log = get_logger("dryrun")
+
+SKIPS = {
+    # (arch, shape): reason — recorded in DESIGN.md §Arch-applicability
+    ("whisper-medium", "long_500k"):
+        "enc-dec with 1500-frame encoder context; 524k-token decode is out of scope",
+}
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: jax.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+
+
+def build_lowerable(cfg: ArchConfig, shape: InputShape, mesh, multi_pod: bool,
+                    selector=None):
+    """Returns (fn, example_args, in_shardings, donate) for the shape's phase."""
+    pspecs = param_shardings(
+        jax.eval_shape(lambda k: model_api.init_params(k, cfg), jax.random.PRNGKey(0)),
+        cfg, multi_pod)
+
+    if shape.phase == "train":
+        st_specs = state_specs(cfg)
+        st_shard = {
+            "params": pspecs,
+            "opt": {"m": pspecs, "v": pspecs, "step": jax.sharding.PartitionSpec()},
+            "step": jax.sharding.PartitionSpec(),
+        }
+        b_specs = input_specs(cfg, shape)
+        b_shard = {k: v for k, v in batch_shardings(cfg, shape, multi_pod).items()
+                   if k in b_specs}
+        fn = make_train_step(cfg, constant(1e-4), selector=selector)
+        key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        args = (st_specs, b_specs, key_spec)
+        shardings = (_named(mesh, st_shard), _named(mesh, b_shard),
+                     jax.NamedSharding(mesh, jax.sharding.PartitionSpec()))
+        return fn, args, shardings, (0,)
+
+    if shape.phase == "prefill":
+        b_specs = prefill_specs(cfg, shape)
+        b_shard = {k: v for k, v in batch_shardings(cfg, shape, multi_pod).items()
+                   if k in b_specs}
+
+        def prefill(params, batch):
+            hidden = model_api.forward_hidden(params, cfg, batch)
+            from repro.models.lm import logits_of, mask_pad_logits
+            if cfg.kind == "encdec":
+                from repro.models.layers import unembed
+                from repro.sharding.ctx import shard_logits
+                return mask_pad_logits(
+                    shard_logits(unembed(hidden, params["embed"], tied=True)),
+                    cfg.vocab_size)
+            return logits_of(params, cfg, hidden)
+
+        p_specs = jax.eval_shape(lambda k: model_api.init_params(k, cfg),
+                                 jax.random.PRNGKey(0))
+        args = (p_specs, b_specs)
+        shardings = (_named(mesh, pspecs), _named(mesh, b_shard))
+        return prefill, args, shardings, ()
+
+    # decode
+    c_specs = cache_specs(cfg, shape)
+    c_shard = cache_shardings(c_specs, cfg, shape, multi_pod)
+    b_specs = input_specs(cfg, shape)
+    b_shard = batch_shardings(cfg, shape, multi_pod)
+    p_specs = jax.eval_shape(lambda k: model_api.init_params(k, cfg),
+                             jax.random.PRNGKey(0))
+    fn = make_serve_step(cfg)
+    args = (p_specs, c_specs, b_specs["tokens"])
+    shardings = (_named(mesh, pspecs), _named(mesh, c_shard),
+                 jax.NamedSharding(mesh, b_shard["tokens"]))
+    return fn, args, shardings, (1,)
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    save_hlo: Optional[str] = None,
+    verbose: bool = True,
+    layers_override: Optional[int] = None,
+    unroll: bool = False,
+    cfg_transform=None,
+    selector=None,
+) -> Dict[str, Any]:
+    """Lower+compile one (arch, shape, mesh) and extract raw costs.
+
+    ``layers_override``/``unroll`` support the layer-slope roofline method
+    (see ``roofline_one``): XLA's cost_analysis counts a while-loop body once,
+    so in-loop FLOPs/bytes/collectives of the L-layer scan are invisible —
+    compiling unrolled L=1 and L=2 variants and extrapolating linearly is
+    exact because all layers are identical.
+    """
+    import dataclasses as _dc
+
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_arch(arch).for_shape(shape)
+    if layers_override is not None:
+        cfg = _dc.replace(cfg, num_layers=layers_override,
+                          enc_layers=min(cfg.enc_layers, layers_override))
+    if unroll:
+        cfg = _dc.replace(cfg, scan_unroll=True)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    if (arch, shape_name) in SKIPS:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": SKIPS[(arch, shape_name)]}
+    if shape_name == "long_500k" and not cfg.supports_long_context():
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": "no sub-quadratic decode variant"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    ctx = ShardingCtx(dp_axes=dp_axes(multi_pod) if shape.global_batch > 1 else (),
+                      tp_axis="model",
+                      seq_axis=None if shape.is_decode else "model")
+    t0 = time.time()
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "phase": shape.phase,
+    }
+    try:
+        with mesh, set_ctx(ctx):
+            fn, args, shardings, donate = build_lowerable(cfg, shape, mesh, multi_pod,
+                                                          selector=selector)
+            jfn = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        flops = float(cost.get("flops", 0.0))
+        bytes_acc = float(cost.get("bytes accessed", 0.0))
+        hlo_text = compiled.as_text()
+        colls = hlo_mod.collective_stats(hlo_text)
+        coll_bytes = int(sum(v["bytes"] for v in colls.values()))
+        bytes_opt = hlo_mod.fusion_optimistic_bytes(hlo_text)
+
+        mem: Dict[str, float] = {}
+        try:
+            ma = compiled.memory_analysis()
+            for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                         "output_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                if hasattr(ma, attr):
+                    mem[attr] = float(getattr(ma, attr))
+        except Exception as e:  # pragma: no cover - backend-specific
+            mem["error"] = str(e)
+        peak = None
+        if "temp_size_in_bytes" in mem:
+            peak = mem["temp_size_in_bytes"] + mem.get("argument_size_in_bytes", 0.0) \
+                - mem.get("alias_size_in_bytes", 0.0) + mem.get("output_size_in_bytes", 0.0)
+
+        full_cfg = get_arch(arch).for_shape(shape)
+        n_active = model_api.active_param_count(
+            full_cfg, jax.eval_shape(lambda k: model_api.init_params(k, full_cfg),
+                                     jax.random.PRNGKey(0)))
+        tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+        mf = rf.model_flops(n_active, tokens, shape.phase)
+        roof = rf.Roofline(
+            arch=arch, shape=shape_name, mesh=rec["mesh"], chips=chips,
+            hlo_flops=flops, hlo_bytes=bytes_acc, collective_bytes=coll_bytes,
+            model_flops=mf, peak_bytes_per_device=peak,
+        )
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "n_layers": cfg.num_layers,
+            "hlo_flops": flops,
+            "hlo_bytes": bytes_acc,
+            "hlo_bytes_opt": float(bytes_opt),
+            "collective_bytes": coll_bytes,
+            "collectives": colls,
+            "memory": mem,
+            **roof.row(),
+        })
+        if save_hlo:
+            os.makedirs(os.path.dirname(save_hlo), exist_ok=True)
+            with open(save_hlo, "w") as f:
+                f.write(hlo_text)
+        if verbose:
+            print(compiled.memory_analysis())
+            print({k: v for k, v in cost.items()
+                   if k in ("flops", "bytes accessed")})
+    except Exception as e:
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-2000:]})
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def roofline_one(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    cfg_transform=None,
+    full_rec: Optional[Dict[str, Any]] = None,
+    selector=None,
+) -> Dict[str, Any]:
+    """Layer-slope roofline: full compile (lowering proof + memory fit) plus
+    unrolled L=1 / L=2 compiles whose cost difference gives the exact
+    per-layer FLOPs/bytes/collectives; total = outer + L * per-layer."""
+    shape = INPUT_SHAPES[shape_name]
+    L = get_arch(arch).num_layers
+    full = full_rec or run_one(arch, shape_name, multi_pod, verbose=False,
+                               cfg_transform=cfg_transform, selector=selector)
+    if full["status"] != "ok":
+        return full
+    c1 = run_one(arch, shape_name, multi_pod, verbose=False, layers_override=1,
+                 unroll=True, cfg_transform=cfg_transform, selector=selector)
+    c2 = run_one(arch, shape_name, multi_pod, verbose=False, layers_override=2,
+                 unroll=True, cfg_transform=cfg_transform, selector=selector)
+    if c1["status"] != "ok" or c2["status"] != "ok":
+        bad = c1 if c1["status"] != "ok" else c2
+        full["slope_error"] = bad.get("error", "slope compile failed")
+        return full
+
+    def extrap(key):
+        a, b = c1[key], c2[key] - c1[key]
+        return max(a - b, 0.0) + L * b        # outer + L * per-layer
+
+    flops = extrap("hlo_flops")
+    bytes_acc = extrap("hlo_bytes")
+    bytes_opt = extrap("hlo_bytes_opt")
+    coll_bytes = extrap("collective_bytes")
+    colls: Dict[str, Dict[str, float]] = {}
+    kinds = set(c1["collectives"]) | set(c2["collectives"])
+    for k in kinds:
+        v1 = c1["collectives"].get(k, {"count": 0, "bytes": 0})
+        v2 = c2["collectives"].get(k, {"count": 0, "bytes": 0})
+        colls[k] = {
+            "count": max(v1["count"] - (v2["count"] - v1["count"]), 0)
+            + L * (v2["count"] - v1["count"]),
+            "bytes": max(v1["bytes"] - (v2["bytes"] - v1["bytes"]), 0)
+            + L * (v2["bytes"] - v1["bytes"]),
+        }
+
+    roof = rf.Roofline(
+        arch=arch, shape=shape_name, mesh=full["mesh"], chips=full["chips"],
+        hlo_flops=flops, hlo_bytes=bytes_acc, collective_bytes=coll_bytes,
+        model_flops=full["model_flops"],
+        peak_bytes_per_device=full.get("peak_bytes_per_device"),
+    )
+    rec = dict(full)
+    rec.update({
+        "method": "layer_slope",
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_acc,
+        "hlo_bytes_opt": bytes_opt,
+        "t_memory_opt_s": round(bytes_opt / rf.HBM_BW, 6),
+        "collective_bytes": coll_bytes,
+        "collectives": colls,
+        "raw_loop": {k: full[k] for k in ("hlo_flops", "hlo_bytes", "collective_bytes")},
+        "slope_wall_s": c1["wall_s"] + c2["wall_s"],
+        **roof.row(),
+    })
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES),
+                    help="input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all archs x shapes")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun.jsonl")
+    ap.add_argument("--save-hlo-dir", default=None)
+    ap.add_argument("--roofline", action="store_true",
+                    help="add layer-slope L=1/L=2 compiles for exact roofline terms")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else all_arch_names()
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    failures = 0
+    with open(args.out, "a") as out:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    hlo_path = None
+                    if args.save_hlo_dir:
+                        hlo_path = os.path.join(
+                            args.save_hlo_dir,
+                            f"{arch}_{shape}_{'mp' if mp else 'sp'}.hlo.txt")
+                    if args.roofline:
+                        rec = roofline_one(arch, shape, mp)
+                    else:
+                        rec = run_one(arch, shape, mp, save_hlo=hlo_path, verbose=False)
+                    rec.pop("trace", None)
+                    out.write(json.dumps(rec) + "\n")
+                    out.flush()
+                    status = rec["status"]
+                    extra = rec.get("bottleneck", rec.get("reason", rec.get("error", "")))
+                    print(f"[{status:>7s}] {arch:25s} {shape:12s} "
+                          f"{rec['mesh']:7s} {rec.get('wall_s', 0.0):7.1f}s {extra}")
+                    if status == "error":
+                        failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,84 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver.
+
+Runs the named optimization variants for the three selected (arch x shape)
+pairs against the single-pod production mesh and appends layer-slope
+roofline records to benchmarks/artifacts/hillclimb.jsonl.  Each variant is a
+(cfg_transform, selector) pair — the hypothesis/meaning lives in
+EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --step A1
+  PYTHONPATH=src python -m repro.launch.hillclimb --step B1 C1 ...
+"""
+
+import argparse
+import dataclasses
+import json
+from typing import Optional
+
+from repro.core.selector import SelectorConfig
+from repro.launch.dryrun import roofline_one
+
+
+def _t(**kw):
+    def tr(cfg):
+        return dataclasses.replace(cfg, **kw)
+
+    return tr
+
+
+STEPS = {
+    # ---- pair A: deepseek-v2-236b train_4k (worst roofline fraction) ------
+    "A1": ("deepseek-v2-236b", "train_4k", _t(moe_dispatch="einsum"), None),
+    "A2": ("deepseek-v2-236b", "train_4k",
+           _t(moe_dispatch="einsum", capacity_factor=1.0), None),
+    "A3": ("deepseek-v2-236b", "train_4k",
+           _t(moe_dispatch="einsum", capacity_factor=1.0, moe_group=128), None),
+    "A4": ("deepseek-v2-236b", "train_4k",
+           _t(moe_dispatch="einsum", capacity_factor=1.0, moe_group=512), None),
+    # ---- pair B: rwkv6-3b train_4k (most collective-bound) ----------------
+    "B1": ("rwkv6-3b", "train_4k", _t(pure_fsdp=True, fsdp=True), None),
+    "B2": ("rwkv6-3b", "train_4k",
+           _t(pure_fsdp=True, fsdp=True, ssm_chunk=64), None),
+    "B3": ("rwkv6-3b", "train_4k",
+           _t(pure_fsdp=True, fsdp=True, ssm_chunk=128), None),
+    # ---- pair C: granite train_4k (paper-technique representative) --------
+    "C1": ("granite-moe-3b-a800m", "train_4k", None,
+           SelectorConfig(mode="coreset", fraction=0.25)),
+    "C2": ("granite-moe-3b-a800m", "train_4k", _t(moe_dispatch="einsum"),
+           SelectorConfig(mode="coreset", fraction=0.25)),
+    "C3": ("granite-moe-3b-a800m", "train_4k", _t(moe_dispatch="einsum"), None),
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--step", nargs="+", required=True, choices=list(STEPS))
+    ap.add_argument("--out", default="benchmarks/artifacts/hillclimb.jsonl")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    fails = 0
+    with open(args.out, "a") as out:
+        for step in args.step:
+            arch, shape, tr, sel = STEPS[step]
+            rec = roofline_one(arch, shape, cfg_transform=tr, selector=sel)
+            rec["step"] = step
+            rec.pop("trace", None)
+            out.write(json.dumps(rec) + "\n")
+            out.flush()
+            if rec["status"] != "ok":
+                fails += 1
+                print(f"[{step}] ERROR {rec.get('error', '')[:300]}")
+            else:
+                print(f"[{step}] {arch}/{shape}: t_comp={rec['t_compute_s']:.3f} "
+                      f"t_mem={rec['t_memory_s']:.3f} t_coll={rec['t_collective_s']:.3f} "
+                      f"bneck={rec['bottleneck']} useful={rec['useful_fraction']:.3f} "
+                      f"peakGiB={(rec.get('peak_bytes_per_device') or 0)/2**30:.1f}")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

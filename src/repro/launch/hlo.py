@@ -1,0 +1,132 @@
+"""HLO-text analysis: collective traffic + op census from a lowered/compiled
+module.  This is the dry-run "profiler" — no real hardware, so the roofline's
+collective term comes from summing operand bytes of every collective op here.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+)
+
+
+def shape_bytes(text: str) -> int:
+    """Sum bytes over every dtype[dims] occurrence in `text` (handles tuple
+    shapes by construction)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _result_bytes_of_line(line: str) -> int:
+    """Bytes of the op's RESULT shape (the `lhs = shape op(...)` part)."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    rhs = lhs[1]
+    # result shape is everything before the opcode name
+    for op in COLLECTIVE_OPS:
+        k = rhs.find(op + "(")
+        if k < 0:
+            k = rhs.find(op + "-start(")
+        if k < 0:
+            k = rhs.find(op + "-done(")
+        if k >= 0:
+            return shape_bytes(rhs[:k])
+    return shape_bytes(rhs)
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, bytes} over the module.
+
+    Bytes = result-shape bytes of each collective op (for all-reduce this is
+    the payload; for all-gather it is the gathered output — a conservative
+    upper bound on link traffic).  *-start ops are counted; their *-done
+    twins are skipped to avoid double counting.
+    """
+    out: Dict[str, Dict[str, float]] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        for op in COLLECTIVE_OPS:
+            if re.search(rf"\b{op}(-start)?\(", s):
+                if re.search(rf"\b{op}-done\(", s):
+                    break
+                out[op]["count"] += 1
+                out[op]["bytes"] += _result_bytes_of_line(s)
+                break
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return int(sum(v["bytes"] for v in collective_stats(hlo_text).values()))
+
+
+def op_census(hlo_text: str, top: int = 15) -> Dict[str, int]:
+    """Count of ops by opcode (remat/redundancy smell test)."""
+    counts: Dict[str, int] = defaultdict(int)
+    opcode_re = re.compile(r" = (?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*) ([a-z][a-z0-9-]*)\(")
+    for line in hlo_text.splitlines():
+        m = opcode_re.search(line)
+        if m:
+            counts[m.group(1)] += 1
+    return dict(sorted(counts.items(), key=lambda kv: -kv[1])[:top])
+
+
+_HEAVY_OPS = ("dot", "scatter", "gather", "dynamic-slice", "dynamic-update-slice",
+              "convolution")
+
+
+def fusion_optimistic_bytes(hlo_text: str) -> int:
+    """Fusion-optimistic HBM-traffic lower bound: result bytes (x2 for
+    read+write) of the ops a TPU pipeline cannot fuse away — matmuls,
+    gathers/scatters, cache updates — ignoring elementwise/convert chains
+    that fuse on TPU.  The XLA-CPU ``cost_analysis()['bytes accessed']``
+    counts every unfused op and over-states traffic by ~10x on deep stacks;
+    the truth lies between the two (both are reported in §Roofline)."""
+    total = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        rhs = s.split(" = ", 1)[1]
+        for op in _HEAVY_OPS:
+            k = rhs.find(f" {op}(")
+            if k < 0 and rhs.startswith("("):
+                continue
+            m = re.match(
+                rf"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+{op}\(", rhs)
+            if m:
+                total += 2 * shape_bytes(m.group(1))
+                break
+    return total
+
+
+def while_trip_counts(hlo_text: str):
+    """Trip counts of while loops when XLA annotates them (scan bodies)."""
+    return [int(m) for m in re.findall(r'trip_count[="]+(\d+)', hlo_text)]

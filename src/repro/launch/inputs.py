@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch x shape).
+
+No device allocation — these are what ``jax.jit(...).lower()`` consumes in
+the dry-run.  The frontend carve-out is visible here: audio/vlm archs get a
+``prefix_embeds`` spec (precomputed frame/patch embeddings) instead of raw
+media.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """Model-input specs for one step of the shape's phase."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.is_decode:
+        out = {"tokens": SDS((B, 1), jnp.int32)}
+        return out
+
+    if cfg.kind == "encdec":
+        # decoder consumes S tokens; encoder consumes the stub frames
+        return {
+            "tokens": SDS((B, S), jnp.int32),
+            "labels": SDS((B, S), jnp.int32),
+            "prefix_embeds": SDS((B, cfg.num_prefix, cfg.d_model), jnp.bfloat16),
+        }
+    if cfg.frontend == "vision_stub":
+        s_text = S - cfg.num_prefix
+        return {
+            "tokens": SDS((B, s_text), jnp.int32),
+            "labels": SDS((B, s_text), jnp.int32),
+            "prefix_embeds": SDS((B, cfg.num_prefix, cfg.d_model), jnp.bfloat16),
+        }
+    return {"tokens": SDS((B, S), jnp.int32), "labels": SDS((B, S), jnp.int32)}
+
+
+def prefill_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    specs = input_specs(cfg, shape)
+    specs.pop("labels", None)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape) -> Any:
+    """Decode-cache specs (eval_shape over init_cache — no allocation)."""
+    from repro.models import api as model_api
+
+    return jax.eval_shape(
+        lambda: model_api.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def state_specs(cfg: ArchConfig) -> Any:
+    """Train-state specs (params + AdamW m/v) via eval_shape."""
+    from repro.models import api as model_api
+    from repro.optim.adamw import adamw_init
+
+    def build(key):
+        params = model_api.init_params(key, cfg)
+        return {"params": params, "opt": adamw_init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    return jax.eval_shape(build, jax.random.PRNGKey(0))

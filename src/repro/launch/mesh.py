@@ -1,0 +1,28 @@
+"""Production mesh builders (TPU v5e target).
+
+Functions, not module constants: importing this module never touches jax
+device state, so smoke tests keep seeing 1 CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over however many devices exist (tests)."""
+    import numpy as np
+
+    devs = np.array(jax.devices()[: n_data * n_model]).reshape(n_data, n_model)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+def dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)

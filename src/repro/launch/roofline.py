@@ -1,0 +1,98 @@
+"""Three-term roofline model from a compiled dry-run artifact.
+
+TPU v5e constants (per chip):
+  peak bf16 compute: 197 TFLOP/s
+  HBM bandwidth:     819 GB/s
+  ICI per link:      ~50 GB/s
+
+  compute term    = HLO_FLOPs / (chips * peak)
+  memory term     = HLO_bytes / (chips * hbm_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-module,
+i.e. already the per-replica program under SPMD); collective_bytes is parsed
+from the compiled HLO text (launch.hlo).  MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE) gives the "useful fraction" check.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # per-chip program FLOPs (SPMD module)
+    hlo_bytes: float          # per-chip HBM traffic
+    collective_bytes: float   # per-chip link traffic
+    model_flops: float        # 6*N(active)*tokens, global
+    peak_bytes_per_device: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / (chips * HLO_FLOPs): how much compiled compute is
+        'useful' model math (catches remat / redundant compute)."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total > 0 else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilisation at the roofline step time."""
+        t = self.step_time
+        return self.model_flops / (self.chips * PEAK_FLOPS * t) if t > 0 else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": round(self.t_compute, 6),
+            "t_memory_s": round(self.t_memory, 6),
+            "t_collective_s": round(self.t_collective, 6),
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_fraction": round(self.useful_fraction, 4),
+            "mfu_at_roofline": round(self.mfu, 4),
+            "peak_bytes_per_device": self.peak_bytes_per_device,
+        }
+
+
+def model_flops(
+    n_active_params: int, tokens: int, phase: str
+) -> float:
+    """6ND for training (fwd+bwd), 2ND for inference fwd."""
+    mult = 6.0 if phase == "train" else 2.0
+    return mult * n_active_params * tokens

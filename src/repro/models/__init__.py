@@ -1,0 +1,19 @@
+from repro.models.api import (
+    active_param_count,
+    decode_step,
+    forward_hidden,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_count,
+)
+
+__all__ = [
+    "init_params",
+    "loss_fn",
+    "forward_hidden",
+    "init_cache",
+    "decode_step",
+    "param_count",
+    "active_param_count",
+]

@@ -1,0 +1,70 @@
+"""Family-dispatching model API: init / loss / decode for any ArchConfig."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, lm
+
+
+def init_params(key: jax.Array, cfg: ArchConfig):
+    if cfg.kind == "encdec":
+        return encdec.init_params(key, cfg)
+    return lm.init_params(key, cfg)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            example_weights: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    if cfg.kind == "encdec":
+        return encdec.loss_fn(params, cfg, batch, example_weights=example_weights)
+    return lm.loss_fn(params, cfg, batch, example_weights=example_weights)
+
+
+def forward_hidden(params, cfg: ArchConfig, batch: Dict[str, jax.Array]):
+    """Hidden states (B, S_text, D) — used by the coreset batch selector."""
+    if cfg.kind == "encdec":
+        h, _ = encdec.forward(params, cfg, batch["tokens"], batch["prefix_embeds"])
+        return h
+    h, _ = lm.forward(params, cfg, batch["tokens"], batch.get("prefix_embeds"))
+    if batch.get("prefix_embeds") is not None:
+        h = h[:, batch["prefix_embeds"].shape[1] :]
+    return h
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=None):
+    if cfg.kind == "encdec":
+        return encdec.init_cache(cfg, batch, cache_len, dtype)
+    return lm.init_cache(cfg, batch, cache_len, dtype)
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens):
+    if cfg.kind == "encdec":
+        return encdec.decode_step(params, cfg, cache, tokens)
+    return lm.decode_step(params, cfg, cache, tokens)
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(p)) for p in jax.tree_util.tree_leaves(params))
+
+
+def active_param_count(cfg: ArchConfig, params) -> int:
+    """Active params per token (MoE: top-k of routed experts + the rest)."""
+    total = param_count(params)
+    if not cfg.is_moe:
+        return total
+
+    def expert_leaves(tree):
+        return sum(
+            int(jnp.size(p))
+            for path, p in jax.tree_util.tree_flatten_with_path(tree)[0]
+            if any(getattr(k, "key", None) == "moe" for k in path)
+            and not any(getattr(k, "key", None) == "router" for k in path)
+        )
+
+    e_total = expert_leaves(params)
+    active_frac = cfg.num_experts_per_tok / max(cfg.num_experts, 1)
+    return int(total - e_total + e_total * active_frac)

@@ -1,0 +1,230 @@
+"""Attention mixers: GQA (full / sliding-window, optional qk-norm), and
+DeepSeek-V2 MLA (multi-head latent attention) with the absorbed decode path
+that attends directly over the compressed kv-lora cache.
+
+Training/prefill attention is query-chunked (lax.map over query blocks) so the
+(B, H, Sq, Sk) score tensor never materialises beyond one chunk — this bounds
+the per-device transient to chunk*Sk scores, which is what lets the 32k
+prefill shapes fit HBM in the dry-run.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+# ==========================================================================
+# GQA
+# ==========================================================================
+
+def init_gqa(key: jax.Array, cfg) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), cfg.param_dtype),
+        "wk": dense_init(ks[1], (d, KV * hd), cfg.param_dtype),
+        "wv": dense_init(ks[2], (d, KV * hd), cfg.param_dtype),
+        "wo": dense_init(ks[3], (H * hd, d), cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.param_dtype)
+    return p
+
+
+def _sdpa_chunked(
+    q: jax.Array,            # (B, Sq, KV, G, hd)
+    k: jax.Array,            # (B, Sk, KV, hd)
+    v: jax.Array,            # (B, Sk, KV, hd)
+    q_positions: jax.Array,  # (Sq,) global positions of queries
+    k_positions: jax.Array,  # (Sk,) global positions of keys
+    window: int,             # 0 = full causal
+    chunk: int,
+) -> jax.Array:
+    """Exact causal attention, sequential over query chunks."""
+    B, Sq, KV, G, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    nc = max(Sq // chunk, 1)
+    chunk = Sq // nc
+    qc = q.reshape(B, nc, chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)  # (nc, B, c, KV, G, hd)
+    qpos = q_positions.reshape(nc, chunk)
+
+    def one(args):
+        qi, qp = args                                    # (B, c, KV, G, hd), (c,)
+        # mixed precision (§Perf A2): bf16 operands, f32 MXU accumulation —
+        # no materialised f32 upcasts of Q/K/V (the baseline .astype(f32)
+        # dominated HBM traffic with convert/copy ops)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qi, k,
+                       preferred_element_type=jnp.float32) * scale
+        causal = k_positions[None, :] <= qp[:, None]     # (c, Sk)
+        if window > 0:
+            causal &= (qp[:, None] - k_positions[None, :]) < window
+        s = jnp.where(causal[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)                   # f32
+        return jnp.einsum("bkgqs,bskh->bqkgh", p.astype(q.dtype), v,
+                          preferred_element_type=jnp.float32).astype(q.dtype)
+
+    # remat per chunk: the (B, H, c, Sk) f32 probs are recomputed in the
+    # backward chunk-by-chunk instead of all chunks being stored at once
+    one = jax.checkpoint(one, prevent_cse=False)
+    out = jax.lax.map(one, (qc, qpos))                   # (nc, B, c, KV, G, hd_v)
+    hd_v = v.shape[-1]
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV * G * hd_v)
+
+
+def gqa_attention(
+    params: dict,
+    cfg,
+    x: jax.Array,                       # (B, S, D)
+    positions: jax.Array,               # (S,)
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,   # ((B,Sc,KV,hd) k, v)
+    cache_positions: Optional[jax.Array] = None,               # (Sc,)
+    window: Optional[int] = None,
+    chunk: int = 1024,
+):
+    """Returns (out (B,S,D), new_kv or None).
+
+    Training/prefill: kv_cache is None -> keys are this segment.
+    Decode: kv_cache given, S==1 -> append then attend over the cache ring.
+    """
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+    win = cfg.sliding_window if window is None else window
+
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    k = (x @ params["wk"]).reshape(B, S, KV, hd)
+    v = (x @ params["wv"]).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions[None, :], cfg.rope_theta)
+        k = apply_rope(k, positions[None, :], cfg.rope_theta)
+    q = q.reshape(B, S, KV, G, hd)
+
+    if kv_cache is None:
+        out = _sdpa_chunked(q, k, v, positions, positions, win, chunk)
+        new_kv = (k, v)
+    else:
+        # decode: caller manages the ring buffer slot + updated kpos
+        ck, cv = kv_cache
+        slot = slot_of(positions, ck.shape[1])
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0, 0))
+        out = _sdpa_chunked(q, ck, cv, positions, cache_positions, win, chunk=1)
+        new_kv = (ck, cv)
+    return out @ params["wo"], new_kv
+
+
+def slot_of(positions: jax.Array, cache_len: int) -> jax.Array:
+    """Ring-buffer slot for a single decode token."""
+    return positions[0] % cache_len
+
+
+def update_kpos(cache_positions: jax.Array, positions: jax.Array) -> jax.Array:
+    slot = slot_of(positions, cache_positions.shape[0])
+    return jax.lax.dynamic_update_slice(cache_positions, positions, (slot,))
+
+
+# ==========================================================================
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ==========================================================================
+
+def init_mla(key: jax.Array, cfg) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], (d, r_q), cfg.param_dtype),          # q down
+        "q_ln": jnp.ones((r_q,), cfg.param_dtype),
+        "w_uq": dense_init(ks[1], (r_q, H * (dn + dr)), cfg.param_dtype),
+        "w_dkv": dense_init(ks[2], (d, r_kv), cfg.param_dtype),        # kv down
+        "kv_ln": jnp.ones((r_kv,), cfg.param_dtype),
+        "w_kpe": dense_init(ks[3], (d, dr), cfg.param_dtype),          # shared rope key
+        "w_uk": dense_init(ks[4], (r_kv, H * dn), cfg.param_dtype),
+        "w_uv": dense_init(ks[5], (r_kv, H * dv), cfg.param_dtype),
+        "wo": dense_init(ks[6], (H * dv, d), cfg.param_dtype),
+    }
+
+
+def _mla_qk(params, cfg, x, positions):
+    """Shared q/compressed-kv projections. Returns q_nope, q_pe, c_kv, k_pe."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q_lat = rms_norm(x @ params["w_dq"], params["q_ln"])
+    q = (q_lat @ params["w_uq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions[None, :], cfg.rope_theta)
+    c_kv = rms_norm(x @ params["w_dkv"], params["kv_ln"])               # (B, S, r_kv)
+    k_pe = (x @ params["w_kpe"]).reshape(B, S, 1, dr)
+    k_pe = apply_rope(k_pe, positions[None, :], cfg.rope_theta)[:, :, 0]  # (B, S, dr)
+    return q_nope, q_pe, c_kv, k_pe
+
+
+def mla_attention(
+    params: dict,
+    cfg,
+    x: jax.Array,
+    positions: jax.Array,
+    kv_cache=None,                    # (c_kv (B,Sc,r_kv), k_pe (B,Sc,dr), kpos)
+    cache_positions=None,
+    chunk: int = 1024,
+):
+    """MLA. Prefill materialises per-head K/V from the latent (matmul-heavy,
+    MXU-friendly); decode uses the ABSORBED form — queries are mapped into
+    latent space (q~ = W_uk^T q_nope) and attention runs directly over the
+    (B, Sc, r_kv) compressed cache, which is the paper-relevant feature:
+    the KV cache is r_kv+dr=576 floats/token instead of 2*H*hd=32768."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dn, dr, dv, r_kv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    scale = 1.0 / math.sqrt(dn + dr)
+    q_nope, q_pe, c_kv, k_pe = _mla_qk(params, cfg, x, positions)
+
+    if kv_cache is None:
+        # non-absorbed prefill: materialise K/V per head (head-sharded)
+        from repro.sharding.ctx import shard_heads
+
+        k_nope = shard_heads((c_kv @ params["w_uk"]).reshape(B, S, H, dn))
+        v = shard_heads((c_kv @ params["w_uv"]).reshape(B, S, H, dv))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, dr))], -1)
+        k = shard_heads(k)
+        q = jnp.concatenate([q_nope, q_pe], -1).reshape(B, S, H, 1, dn + dr)
+        q = shard_heads(q)
+        out = _sdpa_chunked(q, k, v, positions, positions, 0, chunk)   # KV=H, G=1
+        out = out.reshape(B, S, H * dv)
+        new_cache = (c_kv, k_pe)
+    else:
+        cc, cpe = kv_cache
+        kpos = cache_positions
+        slot = slot_of(positions, cc.shape[1])
+        cc = jax.lax.dynamic_update_slice(cc, c_kv, (0, slot, 0))
+        cpe = jax.lax.dynamic_update_slice(cpe, k_pe, (0, slot, 0))
+        # absorbed: q~ (B,1,H,r_kv) = q_nope @ W_uk (viewed (r_kv, H, dn))
+        w_uk = params["w_uk"].reshape(r_kv, H, dn)
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        s = jnp.einsum("bqhr,bsr->bhqs", q_lat, cc.astype(jnp.float32))
+        s = s + jnp.einsum("bqhd,bsd->bhqs", q_pe.astype(jnp.float32),
+                           cpe.astype(jnp.float32))
+        s = s * scale
+        mask = kpos[None, :] <= positions[:, None]                     # (1, Sc)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        lat = jnp.einsum("bhqs,bsr->bqhr", p, cc.astype(jnp.float32))  # (B,1,H,r_kv)
+        w_uv = params["w_uv"].reshape(r_kv, H, dv)
+        out = jnp.einsum("bqhr,rhv->bqhv", lat, w_uv.astype(jnp.float32))
+        out = out.reshape(B, S, H * dv).astype(x.dtype)
+        new_cache = (cc, cpe)
+    return out @ params["wo"], new_cache

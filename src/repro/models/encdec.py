@@ -1,0 +1,247 @@
+"""Encoder-decoder backbone (Whisper-medium shape).
+
+Frontend carve-out: the mel-spectrogram + conv feature extractor is a STUB —
+the model consumes precomputed frame embeddings (B, num_prefix, d_model).
+The encoder is bidirectional self-attention + MLP; the decoder adds causal
+self-attention (KV-cached for decode) and cross-attention over the encoder
+output (whose K/V are computed once and cached for decode).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    cross_entropy,
+    dense_init,
+    embed,
+    init_embed,
+    init_mlp,
+    mlp,
+    rms_norm,
+    unembed,
+)
+from repro.models.lm import KPOS_EMPTY, mask_pad_logits
+from repro.sharding.ctx import shard_batch_seq, shard_logits
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# cross attention
+# --------------------------------------------------------------------------
+
+def init_cross(key: jax.Array, cfg: ArchConfig) -> Params:
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, H * hd), cfg.param_dtype),
+        "wk": dense_init(ks[1], (d, H * hd), cfg.param_dtype),
+        "wv": dense_init(ks[2], (d, H * hd), cfg.param_dtype),
+        "wo": dense_init(ks[3], (H * hd, d), cfg.param_dtype),
+    }
+
+
+def cross_kv(params: Params, cfg: ArchConfig, memory: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    B, P, _ = memory.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    k = (memory @ params["wk"]).reshape(B, P, H, hd)
+    v = (memory @ params["wv"]).reshape(B, P, H, hd)
+    return k, v
+
+
+def cross_attention(params: Params, cfg: ArchConfig, x: jax.Array,
+                    k: jax.Array, v: jax.Array) -> jax.Array:
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(x.dtype)
+    return out.reshape(B, S, H * hd) @ params["wo"]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_enc_layer(key: jax.Array, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "ffn_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "attn": attn.init_gqa(k1, cfg),
+        "ffn": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def _init_dec_layer(key: jax.Array, cfg: ArchConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "cross_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "ffn_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "attn": attn.init_gqa(k1, cfg),
+        "cross": init_cross(k2, cfg),
+        "ffn": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Params:
+    ke, kd, kt, kp, kpe = jax.random.split(key, 5)
+    enc = jax.vmap(lambda k: _init_enc_layer(k, cfg))(jax.random.split(ke, cfg.enc_layers))
+    dec = jax.vmap(lambda k: _init_dec_layer(k, cfg))(jax.random.split(kd, cfg.num_layers))
+    return {
+        "embed": init_embed(kt, cfg.vocab_pad, cfg.d_model, cfg.param_dtype),
+        "pos_embed": dense_init(kp, (cfg.learned_pos, cfg.d_model), cfg.param_dtype, scale=0.02),
+        "enc_pos_embed": dense_init(kpe, (cfg.num_prefix, cfg.d_model), cfg.param_dtype, scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "enc_final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "enc_layers": enc,
+        "layers": dec,
+    }
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def encode(params: Params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, P, D) stub embeddings -> encoder output (B, P, D)."""
+    B, P, D = frames.shape
+    x = frames.astype(cfg.param_dtype) + params["enc_pos_embed"][None, :P]
+    positions = jnp.arange(P)
+    x = shard_batch_seq(x)
+
+    def body(carry, p):
+        h = rms_norm(carry, p["attn_norm"])
+        # bidirectional: window=0 and no causal mask -> implement by giving
+        # every query position the max position so all keys pass the mask
+        out, _ = attn.gqa_attention(
+            p["attn"], cfg, h, positions * 0 + (P - 1), window=0, chunk=cfg.attn_chunk
+        )
+        carry = carry + out
+        h = rms_norm(carry, p["ffn_norm"])
+        return carry + mlp(p["ffn"], h), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"],
+                        unroll=cfg.enc_layers if cfg.scan_unroll else 1)
+    return rms_norm(x, params["enc_final_norm"])
+
+
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jax.Array,                # (B, S)
+    prefix_embeds: jax.Array,         # (B, P, D) frame embeddings (stub)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (decoder hidden (B, S, D), aux=0)."""
+    enc_out = encode(params, cfg, prefix_embeds)
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    x = embed(tokens, params["embed"]) + params["pos_embed"][positions][None]
+    x = shard_batch_seq(x)
+
+    def body(carry, p):
+        h = rms_norm(carry, p["attn_norm"])
+        out, _ = attn.gqa_attention(p["attn"], cfg, h, positions, chunk=cfg.attn_chunk)
+        carry = carry + out
+        h = rms_norm(carry, p["cross_norm"])
+        k, v = cross_kv(p["cross"], cfg, enc_out)
+        carry = carry + cross_attention(p["cross"], cfg, h, k, v)
+        h = rms_norm(carry, p["ffn_norm"])
+        return carry + mlp(p["ffn"], h), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"],
+                        unroll=cfg.num_layers if cfg.scan_unroll else 1)
+    return rms_norm(x, params["final_norm"]), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            aux_weight: float = 0.0,
+            example_weights: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    hidden, _ = forward(params, cfg, batch["tokens"], batch["prefix_embeds"])
+    logits = mask_pad_logits(
+        shard_logits(unembed(hidden, params["embed"], tied=True)), cfg.vocab_size)
+    ce = cross_entropy(logits, batch["labels"]).mean(axis=-1)
+    if example_weights is not None:
+        denom = jnp.maximum(jnp.sum(example_weights), 1e-6)
+        loss = jnp.sum(example_weights * ce) / denom
+    else:
+        loss = ce.mean()
+    return loss, {"ce": loss, "aux": jnp.zeros(())}
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=None) -> Dict[str, Any]:
+    dt = dtype or cfg.param_dtype
+    L, H, KV, hd = cfg.num_layers, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    P = cfg.num_prefix
+    return {
+        "layers": {
+            "k": jnp.zeros((L, batch, cache_len, KV, hd), dt),
+            "v": jnp.zeros((L, batch, cache_len, KV, hd), dt),
+            "cross_k": jnp.zeros((L, batch, P, H, hd), dt),
+            "cross_v": jnp.zeros((L, batch, P, H, hd), dt),
+        },
+        "kpos": jnp.full((cache_len,), KPOS_EMPTY, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill_cross(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                  frames: jax.Array) -> Dict[str, Any]:
+    """Run the encoder once and stash per-layer cross K/V (real serving path;
+    the dry-run decode shape assumes this already happened)."""
+    enc_out = encode(params, cfg, frames)
+
+    def per_layer(p):
+        return cross_kv(p["cross"], cfg, enc_out)
+
+    ck, cv = jax.vmap(per_layer)(params["layers"])
+    layers = dict(cache["layers"])
+    layers["cross_k"], layers["cross_v"] = ck, cv
+    return {**cache, "layers": layers}
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                tokens: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    pos = cache["pos"]
+    positions = pos[None]
+    x = embed(tokens, params["embed"]) + params["pos_embed"][positions][None]
+    kpos = attn.update_kpos(cache["kpos"], positions)
+
+    def body(carry, xs):
+        p, lc = xs
+        new_lc = dict(lc)
+        h = rms_norm(carry, p["attn_norm"])
+        out, (ck, cv) = attn.gqa_attention(
+            p["attn"], cfg, h, positions, kv_cache=(lc["k"], lc["v"]),
+            cache_positions=kpos)
+        new_lc["k"], new_lc["v"] = ck, cv
+        carry = carry + out
+        h = rms_norm(carry, p["cross_norm"])
+        carry = carry + cross_attention(p["cross"], cfg, h, lc["cross_k"], lc["cross_v"])
+        h = rms_norm(carry, p["ffn_norm"])
+        return carry + mlp(p["ffn"], h), new_lc
+
+    x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]),
+                                 unroll=cfg.num_layers if cfg.scan_unroll else 1)
+    x = rms_norm(x, params["final_norm"])
+    logits = mask_pad_logits(
+        shard_logits(unembed(x, params["embed"], tied=True)), cfg.vocab_size)
+    return logits, {"layers": new_layers, "kpos": kpos, "pos": pos + 1}

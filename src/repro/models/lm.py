@@ -1,0 +1,292 @@
+"""Decoder-only language model, assembled from an ArchConfig.
+
+All per-layer parameters are stacked on a leading L axis and the layer stack
+runs as a single ``jax.lax.scan`` (optionally rematerialised), which keeps
+the lowered HLO size O(1) in depth — essential for compiling 60-layer models
+against a 512-device mesh on this host.
+
+Covers the dense / moe / ssm / hybrid / vlm families; the enc-dec (whisper)
+family builds on these pieces in :mod:`repro.models.encdec`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (
+    cross_entropy,
+    dense_init,
+    embed,
+    init_embed,
+    init_mlp,
+    mlp,
+    rms_norm,
+    unembed,
+)
+from repro.sharding.ctx import shard_batch_seq, shard_logits
+
+Params = Dict[str, Any]
+
+KPOS_EMPTY = jnp.iinfo(jnp.int32).max // 2   # "slot never written" marker
+
+
+# ==========================================================================
+# init
+# ==========================================================================
+
+def init_layer(key: jax.Array, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "attn_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "ffn_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if cfg.mixer == "attention":
+        if cfg.attn_type == "mla":
+            p["mla"] = attn.init_mla(ks[0], cfg)
+        else:
+            p["attn"] = attn.init_gqa(ks[0], cfg)
+    elif cfg.mixer == "rwkv6":
+        p["rwkv"] = ssm.init_rwkv6(ks[0], cfg)
+    elif cfg.mixer == "hymba":
+        p["attn"] = attn.init_gqa(ks[0], cfg)
+        p["mamba"] = ssm.init_mamba(ks[1], cfg)
+    else:
+        raise ValueError(cfg.mixer)
+    if cfg.is_moe:
+        p["moe"] = moe_mod.init_moe(ks[2], cfg)
+        if cfg.shared_d_ff:
+            p["ffn"] = init_mlp(ks[3], cfg.d_model, cfg.shared_d_ff, cfg.param_dtype)
+    else:
+        p["ffn"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.param_dtype)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Params:
+    k_embed, k_head, k_layers, k_pos = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    params: Params = {
+        "embed": init_embed(k_embed, cfg.vocab_pad, cfg.d_model, cfg.param_dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_pad), cfg.param_dtype)
+    if cfg.learned_pos:
+        params["pos_embed"] = dense_init(k_pos, (cfg.learned_pos, cfg.d_model), cfg.param_dtype, scale=0.02)
+    return params
+
+
+# ==========================================================================
+# training / prefill forward
+# ==========================================================================
+
+def _layer_fwd(cfg: ArchConfig, x: jax.Array, p: Params, positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One block. Returns (x, aux_loss)."""
+    h = rms_norm(x, p["attn_norm"])
+    if cfg.mixer == "attention":
+        if cfg.attn_type == "mla":
+            out, _ = attn.mla_attention(p["mla"], cfg, h, positions, chunk=cfg.attn_chunk)
+        else:
+            out, _ = attn.gqa_attention(p["attn"], cfg, h, positions, chunk=cfg.attn_chunk)
+    elif cfg.mixer == "rwkv6":
+        out, _ = ssm.rwkv6_mixer(p["rwkv"], cfg, h, chunk=cfg.ssm_chunk)
+    else:  # hymba: parallel attention + mamba heads
+        a, _ = attn.gqa_attention(p["attn"], cfg, h, positions, chunk=cfg.attn_chunk)
+        m, _ = ssm.mamba_mixer(p["mamba"], cfg, h, chunk=max(cfg.ssm_chunk, 4))
+        out = 0.5 * (a + m)
+    x = x + shard_batch_seq(out)
+
+    h = rms_norm(x, p["ffn_norm"])
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        out, aux = moe_mod.moe_ffn(p["moe"], cfg, h, cfg.capacity_factor)
+        if cfg.shared_d_ff:
+            out = out + mlp(p["ffn"], h)
+    else:
+        out = mlp(p["ffn"], h)
+    x = x + shard_batch_seq(out)
+    return x, aux
+
+
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jax.Array,                       # (B, S_text)
+    prefix_embeds: Optional[jax.Array] = None,   # (B, P, D) for vlm/audio stubs
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (hidden (B, S, D), total_aux_loss)."""
+    x = embed(tokens, params["embed"])
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, D = x.shape
+    positions = jnp.arange(S)
+    if cfg.learned_pos:
+        x = x + params["pos_embed"][positions][None]
+    x = shard_batch_seq(x)
+
+    def body(carry, layer_p):
+        y, aux = _layer_fwd(cfg, carry, layer_p, positions)
+        return y, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, auxes = jax.lax.scan(body, x, params["layers"],
+                           unroll=cfg.num_layers if cfg.scan_unroll else 1)
+    x = rms_norm(x, params["final_norm"])
+    return x, jnp.sum(auxes)
+
+
+def mask_pad_logits(logits: jax.Array, vocab: int) -> jax.Array:
+    """-inf on the padded vocab columns (see ArchConfig.vocab_pad)."""
+    if logits.shape[-1] == vocab:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(col < vocab, logits, -1e30)
+
+
+def logits_of(params: Params, cfg: ArchConfig, hidden: jax.Array) -> jax.Array:
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = shard_logits(unembed(hidden, head, cfg.tie_embeddings))
+    return mask_pad_logits(logits, cfg.vocab_size)
+
+
+def loss_fn(
+    params: Params,
+    cfg: ArchConfig,
+    batch: Dict[str, jax.Array],
+    aux_weight: float = 0.01,
+    example_weights: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token CE (+ MoE aux). For prefix archs (vlm/audio) the loss is
+    computed on the text positions only."""
+    prefix = batch.get("prefix_embeds")
+    hidden, aux = forward(params, cfg, batch["tokens"], prefix)
+    if prefix is not None:
+        hidden = hidden[:, prefix.shape[1] :]
+    logits = logits_of(params, cfg, hidden)
+    ce = cross_entropy(logits, batch["labels"])              # (B, S_text)
+    per_example = ce.mean(axis=-1)                           # (B,)
+    if example_weights is not None:
+        denom = jnp.maximum(jnp.sum(example_weights), 1e-6)
+        loss = jnp.sum(example_weights * per_example) / denom
+    else:
+        loss = per_example.mean()
+    total = loss + aux_weight * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# ==========================================================================
+# decode (serve_step)
+# ==========================================================================
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=None) -> Dict[str, Any]:
+    """Decode-state pytree. ``cache_len`` is the ring size: full seq_len for
+    exact attention, the window for sliding-window, ignored by pure SSM."""
+    dt = dtype or cfg.param_dtype
+    L = cfg.num_layers
+    layers: Dict[str, Any] = {}
+    if cfg.mixer in ("attention", "hymba") and cfg.attn_type != "mla":
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        eff = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        layers["k"] = jnp.zeros((L, batch, eff, KV, hd), dt)
+        layers["v"] = jnp.zeros((L, batch, eff, KV, hd), dt)
+    if cfg.attn_type == "mla":
+        layers["c_kv"] = jnp.zeros((L, batch, cache_len, cfg.kv_lora_rank), dt)
+        layers["k_pe"] = jnp.zeros((L, batch, cache_len, cfg.qk_rope_dim), dt)
+    if cfg.mixer == "rwkv6":
+        H, hd = cfg.num_heads, cfg.d_model // cfg.num_heads
+        layers["wkv"] = jnp.zeros((L, batch, H, hd, hd), jnp.float32)
+        layers["shift"] = jnp.zeros((L, batch, cfg.d_model), dt)
+    if cfg.mixer == "hymba":
+        layers["mamba_h"] = jnp.zeros((L, batch, cfg.mamba_d_inner, cfg.ssm_state), jnp.float32)
+    cache: Dict[str, Any] = {"layers": layers, "pos": jnp.zeros((), jnp.int32)}
+    if ("k" in layers) or ("c_kv" in layers):
+        eff = layers.get("k", layers.get("c_kv")).shape[2]
+        cache["kpos"] = jnp.full((eff,), KPOS_EMPTY, jnp.int32)
+    return cache
+
+
+def _layer_decode(
+    cfg: ArchConfig,
+    x: jax.Array,
+    p: Params,
+    lc: Dict[str, jax.Array],
+    positions: jax.Array,
+    kpos: Optional[jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    new_lc = dict(lc)
+    h = rms_norm(x, p["attn_norm"])
+    if cfg.mixer == "attention":
+        if cfg.attn_type == "mla":
+            out, (cc, cpe) = attn.mla_attention(
+                p["mla"], cfg, h, positions, kv_cache=(lc["c_kv"], lc["k_pe"]),
+                cache_positions=kpos)
+            new_lc["c_kv"], new_lc["k_pe"] = cc, cpe
+        else:
+            out, (ck, cv) = attn.gqa_attention(
+                p["attn"], cfg, h, positions, kv_cache=(lc["k"], lc["v"]),
+                cache_positions=kpos)
+            new_lc["k"], new_lc["v"] = ck, cv
+    elif cfg.mixer == "rwkv6":
+        out, st = ssm.rwkv6_mixer(p["rwkv"], cfg, h,
+                                  state={"wkv": lc["wkv"], "shift": lc["shift"]},
+                                  chunk=1)
+        new_lc["wkv"], new_lc["shift"] = st["wkv"], st["shift"]
+    else:  # hymba
+        a, (ck, cv) = attn.gqa_attention(
+            p["attn"], cfg, h, positions, kv_cache=(lc["k"], lc["v"]),
+            cache_positions=kpos)
+        m, hm = ssm.mamba_mixer(p["mamba"], cfg, h, state=lc["mamba_h"], chunk=1)
+        new_lc["k"], new_lc["v"], new_lc["mamba_h"] = ck, cv, hm
+        out = 0.5 * (a + m)
+    x = x + out
+
+    h = rms_norm(x, p["ffn_norm"])
+    if cfg.is_moe:
+        out, _ = moe_mod.moe_ffn(p["moe"], cfg, h, cfg.capacity_factor)
+        if cfg.shared_d_ff:
+            out = out + mlp(p["ffn"], h)
+    else:
+        out = mlp(p["ffn"], h)
+    return x + out, new_lc
+
+
+def decode_step(
+    params: Params,
+    cfg: ArchConfig,
+    cache: Dict[str, Any],
+    tokens: jax.Array,                 # (B, 1)
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """serve_step: ONE new token against the standing cache."""
+    pos = cache["pos"]
+    positions = pos[None]                                    # (1,)
+    x = embed(tokens, params["embed"])
+    if cfg.learned_pos:
+        x = x + params["pos_embed"][positions][None]
+
+    kpos = cache.get("kpos")
+    if kpos is not None:
+        kpos = attn.update_kpos(kpos, positions)
+
+    def body(carry, xs):
+        layer_p, lc = xs
+        y, new_lc = _layer_decode(cfg, carry, layer_p, lc, positions, kpos)
+        return y, new_lc
+
+    x, new_layers = jax.lax.scan(body, x, (params["layers"], cache["layers"]),
+                                 unroll=cfg.num_layers if cfg.scan_unroll else 1)
+    x = rms_norm(x, params["final_norm"])
+    logits = logits_of(params, cfg, x)                       # (B, 1, V)
+    new_cache = {"layers": new_layers, "pos": pos + 1}
+    if kpos is not None:
+        new_cache["kpos"] = kpos
+    return logits, new_cache

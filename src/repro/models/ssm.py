@@ -1,0 +1,247 @@
+"""Attention-free mixers: RWKV-6 (Finch) and a Mamba-style selective SSM
+branch (for Hymba's parallel heads).
+
+TPU adaptation (recorded in DESIGN.md): the reference CUDA kernels for both
+models are per-timestep recurrences in SRAM.  On TPU we use the CHUNKED
+linear-attention form instead — an outer ``lax.scan`` carries the recurrent
+state across chunks while all within-chunk work is (C x C)/(C x d) matmuls
+that feed the MXU.  This keeps the materialised state O(B*H*hd^2) per chunk
+instead of O(B*S*...) (which would be terabytes at 32k x 1M tokens) and gives
+the compiler a short static loop (S/C trips) rather than an S-trip scalar
+recurrence.
+
+Numerics: per-token log-decays are clamped to [-DECAY_CLAMP, 0] so the
+within-chunk exp() of cumulative decays stays in f32 range (documented
+deviation; training from scratch is insensitive to the clamp).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+DECAY_CLAMP = 2.0   # max |log w| per token; chunk 32 -> exponent <= 64 (f32-safe)
+
+
+# ==========================================================================
+# RWKV-6 (Finch): data-dependent decay WKV, chunked
+# ==========================================================================
+
+def init_rwkv6(key: jax.Array, cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    lora = max(32, hd // 2)
+    ks = jax.random.split(key, 12)
+    return {
+        # token-shift mixing coefficients (static lerp; data-dep part via lora)
+        "mix_r": jnp.full((d,), 0.5, cfg.param_dtype),
+        "mix_k": jnp.full((d,), 0.5, cfg.param_dtype),
+        "mix_v": jnp.full((d,), 0.5, cfg.param_dtype),
+        "mix_w": jnp.full((d,), 0.5, cfg.param_dtype),
+        "w_r": dense_init(ks[0], (d, d), cfg.param_dtype),
+        "w_k": dense_init(ks[1], (d, d), cfg.param_dtype),
+        "w_v": dense_init(ks[2], (d, d), cfg.param_dtype),
+        "w_g": dense_init(ks[3], (d, d), cfg.param_dtype),
+        "w_o": dense_init(ks[4], (d, d), cfg.param_dtype),
+        # data-dependent decay: w_t = -softplus(base + lora(x)) (log-space)
+        "decay_base": jnp.full((d,), -1.0, jnp.float32),
+        "decay_lora_a": dense_init(ks[5], (d, lora), cfg.param_dtype),
+        "decay_lora_b": dense_init(ks[6], (lora, d), cfg.param_dtype, scale=1e-2),
+        "bonus_u": jnp.zeros((H, hd), jnp.float32),                 # per-head u
+        "ln_out": jnp.ones((d,), cfg.param_dtype),                  # group-ish norm
+    }
+
+
+def _chunked_wkv(
+    r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array, u: jax.Array,
+    state0: jax.Array, chunk: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV6.
+
+    r,k,v,logw: (B, S, H, hd); u: (H, hd); state0: (B, H, hd, hd).
+    Recurrence: S_t = diag(w_t) S_{t-1} + k_t v_t^T
+                y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    Returns (y (B,S,H,hd), state (B,H,hd,hd)).
+    """
+    B, S, H, hd = r.shape
+    nc = max(S // chunk, 1)
+    c = S // nc
+
+    def resh(x):
+        return x.reshape(B, nc, c, H, hd).transpose(1, 0, 3, 2, 4)   # (nc,B,H,c,hd)
+
+    # §Perf B2/B3: keep the chunk stacks in the model dtype (halves the
+    # gather/HBM bytes vs the f32 baseline; decay math stays f32) and shard
+    # their head_dim over the model axis so the chunk scan's dynamic slices
+    # are device-local instead of all-gathering the full (nc,B,H,c,hd) stack.
+    from repro.sharding import ctx as shctx
+
+    def stack(x):
+        x = resh(x)                                  # (nc, B, H, c, hd)
+        cc = shctx.current_ctx()
+        if cc is None:
+            return x
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding.specs import sanitize
+        dp = cc.dp_axes if cc.dp_axes else None
+        spec = sanitize(P(None, dp, None, None, cc.tp_axis), tuple(x.shape))
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    rc, kc, vc = stack(r), stack(k), stack(v)
+    wc = stack(logw)
+
+    def body(state, args):
+        ri, ki, vi, lwi = args                       # (B,H,c,hd)
+        lwi = lwi.astype(jnp.float32)
+        L = jnp.cumsum(lwi, axis=2)                  # inclusive cumulative log decay
+        Lprev = L - lwi                              # exclusive (decay before t)
+        # inter-chunk: y_inter_t = (r_t * exp(Lprev_t))^T S0
+        r_dec = ri.astype(jnp.float32) * jnp.exp(Lprev)
+        y_inter = jnp.einsum("bhck,bhkv->bhcv", r_dec, state,
+                             preferred_element_type=jnp.float32)
+        # intra-chunk: A_{tj} = sum_d r_td k_jd exp(Lprev_t - L_j), j < t
+        k_dec = ki.astype(jnp.float32) * jnp.exp(-L)
+        A = jnp.einsum("bhtk,bhjk->bhtj", r_dec, k_dec,
+                       preferred_element_type=jnp.float32)
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        A = jnp.where(tri[None, None], A, 0.0)
+        diag = jnp.einsum("bhtk,bhtk->bht", ri.astype(jnp.float32),
+                          ki.astype(jnp.float32) * u[None, :, None, :])
+        vf = vi.astype(jnp.float32)
+        y = y_inter + jnp.einsum("bhtj,bhjv->bhtv", A, vf,
+                                 preferred_element_type=jnp.float32) \
+            + diag[..., None] * vf
+        # state update: S_C = diag(exp(L_C)) S0 + sum_j diag(exp(L_C - L_j)) k_j v_j^T
+        Lc = L[:, :, -1:, :]                          # (B,H,1,hd)
+        k_carry = ki.astype(jnp.float32) * jnp.exp(Lc - L)
+        state = jnp.exp(Lc[:, :, 0, :])[..., None] * state + \
+            jnp.einsum("bhjk,bhjv->bhkv", k_carry, vf,
+                       preferred_element_type=jnp.float32)
+        return state, y
+
+    # remat per chunk: the (B,H,c,c) decay matrices are recomputed in the
+    # backward instead of being stacked across all S/c chunks
+    body = jax.checkpoint(body, prevent_cse=False)
+    state, ys = jax.lax.scan(body, state0.astype(jnp.float32), (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+    return y, state
+
+
+def rwkv6_mixer(
+    params: dict,
+    cfg,
+    x: jax.Array,                        # (B, S, D)
+    state: Optional[dict] = None,        # {"wkv": (B,H,hd,hd), "shift": (B,D)}
+    chunk: int = 32,
+):
+    """Returns (out (B,S,D), new_state or None)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    hd = D // H
+    prev = (
+        jnp.concatenate([jnp.zeros((B, 1, D), x.dtype), x[:, :-1]], axis=1)
+        if state is None
+        else jnp.concatenate([state["shift"][:, None], x[:, :-1]], axis=1)
+    )
+
+    def mixed(name):
+        m = params[f"mix_{name}"]
+        return x * m + prev * (1 - m)
+
+    r = (mixed("r") @ params["w_r"]).reshape(B, S, H, hd)
+    k = (mixed("k") @ params["w_k"]).reshape(B, S, H, hd)
+    v = (mixed("v") @ params["w_v"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(x @ params["w_g"])
+    lw = params["decay_base"] + (mixed("w") @ params["decay_lora_a"]) @ params["decay_lora_b"]
+    logw = -jnp.clip(jax.nn.softplus(lw.astype(jnp.float32)), 0.0, DECAY_CLAMP)
+    logw = logw.reshape(B, S, H, hd)
+
+    s0 = (
+        jnp.zeros((B, H, hd, hd), jnp.float32) if state is None else state["wkv"]
+    )
+    y, s_new = _chunked_wkv(r, k, v, logw, params["bonus_u"], s0, chunk)
+    y = rms_norm(y.reshape(B, S, D).astype(x.dtype), params["ln_out"])
+    out = (y * g) @ params["w_o"]
+    new_state = {"wkv": s_new, "shift": x[:, -1]}
+    return out, new_state
+
+
+# ==========================================================================
+# Mamba-style selective SSM branch (Hymba)
+# ==========================================================================
+
+def init_mamba(key: jax.Array, cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_d_inner
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), cfg.param_dtype),      # x & gate
+        "w_bcdt": dense_init(ks[1], (di, 2 * N + 1), cfg.param_dtype),  # B, C, dt
+        "dt_bias": jnp.zeros((1,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))[None, :]
+        * jnp.ones((di, 1), jnp.float32),                             # (di, N)
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[2], (di, d), cfg.param_dtype),
+        "ln_out": jnp.ones((di,), cfg.param_dtype),
+    }
+
+
+def mamba_mixer(
+    params: dict,
+    cfg,
+    x: jax.Array,                      # (B, S, D)
+    state: Optional[jax.Array] = None,  # (B, di, N)
+    chunk: int = 64,
+):
+    """Selective SSM: h_t = exp(A*dt_t) h_{t-1} + dt_t B_t x_t; y = C_t.h_t + D x.
+
+    Outer scan over chunks; within-chunk via associative_scan (parallel
+    prefix over the diagonal recurrence) so the (B, c, di, N) tensor stays
+    chunk-bounded.
+    """
+    B, S, D = x.shape
+    di, N = cfg.mamba_d_inner, cfg.ssm_state
+    xz = x @ params["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)                   # (B,S,di) each
+    u = jax.nn.silu(u)
+    bcdt = u @ params["w_bcdt"]                        # (B,S,2N+1)
+    Bm, Cm, dt = bcdt[..., :N], bcdt[..., N : 2 * N], bcdt[..., 2 * N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    dt = jnp.clip(dt, 1e-4, 10.0)                      # (B,S,1): scalar dt per token
+    A = -jnp.exp(params["A_log"])                      # (di, N), negative
+
+    nc = max(S // chunk, 1)
+    c = S // nc
+    uc = u.astype(jnp.float32).reshape(B, nc, c, di).transpose(1, 0, 2, 3)
+    Bc = Bm.astype(jnp.float32).reshape(B, nc, c, N).transpose(1, 0, 2, 3)
+    Cc = Cm.astype(jnp.float32).reshape(B, nc, c, N).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(B, nc, c, 1).transpose(1, 0, 2, 3)
+
+    def body(h, args):
+        ui, Bi, Ci, dti = args                         # (B,c,di) (B,c,N) (B,c,N) (B,c,1)
+        a = jnp.exp(dti[..., None] * A[None, None])    # (B,c,di,N)
+        b = (dti * Bi)[:, :, None, :] * ui[..., None]  # (B,c,di,N)
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, br + ar * bl
+
+        a_sc, b_sc = jax.lax.associative_scan(comb, (a, b), axis=1)
+        hs = a_sc * h[:, None] + b_sc                  # (B,c,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, Ci)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, di, N), jnp.float32) if state is None else state
+    body = jax.checkpoint(body, prevent_cse=False)
+    h_final, ys = jax.lax.scan(body, h0, (uc, Bc, Cc, dtc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    y = y + params["D"][None, None] * u.astype(jnp.float32)
+    y = rms_norm(y.astype(x.dtype), params["ln_out"]) * jax.nn.silu(z)
+    return y @ params["w_out"], h_final

@@ -1,0 +1,12 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.sgd import sgd_init, sgd_update
+from repro.optim.schedules import constant, cosine_with_warmup
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "sgd_init",
+    "sgd_update",
+    "constant",
+    "cosine_with_warmup",
+]

@@ -1,0 +1,52 @@
+"""AdamW, hand-rolled (no optax in the image), pytree-native.
+
+State: {"m": f32 tree, "v": f32 tree, "step": scalar}.  m/v inherit the
+parameter shardings (see sharding.specs.opt_shardings).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params: Any) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    state: Dict[str, Any],
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Tuple[Any, Dict[str, Any]]:
+    step = state["step"] + 1
+
+    # global-norm clip in f32
+    g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(g32)))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+    g32 = jax.tree_util.tree_map(lambda g: g * scale, g32)
+
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], g32)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}

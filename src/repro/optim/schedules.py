@@ -1,0 +1,23 @@
+"""LR schedules as step -> lr functions (jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return fn
+
+
+def cosine_with_warmup(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup, warm, cos)
+
+    return fn

@@ -1,0 +1,24 @@
+"""SGD with momentum (pytree-native)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params: Any) -> Dict[str, Any]:
+    return {"mom": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+
+def sgd_update(
+    params: Any, grads: Any, state: Dict[str, Any], lr: jax.Array, *, momentum: float = 0.9
+) -> Tuple[Any, Dict[str, Any]]:
+    mom = jax.tree_util.tree_map(
+        lambda m, g: momentum * m + g.astype(jnp.float32), state["mom"], grads
+    )
+    new_params = jax.tree_util.tree_map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, mom
+    )
+    return new_params, {"mom": mom}

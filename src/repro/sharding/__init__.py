@@ -1,0 +1,20 @@
+from repro.sharding.ctx import (
+    ShardingCtx,
+    current_ctx,
+    set_ctx,
+    shard_batch_seq,
+    shard_expert,
+    shard_logits,
+)
+from repro.sharding.specs import param_shardings, cache_shardings
+
+__all__ = [
+    "ShardingCtx",
+    "current_ctx",
+    "set_ctx",
+    "shard_batch_seq",
+    "shard_expert",
+    "shard_logits",
+    "param_shardings",
+    "cache_shardings",
+]

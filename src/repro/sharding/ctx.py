@@ -1,0 +1,102 @@
+"""Activation-sharding context.
+
+Model code calls the ``shard_*`` helpers; outside a mesh (CPU smoke tests)
+they are no-ops, under the dry-run/production launchers ``set_ctx`` installs
+the axis names and they become ``with_sharding_constraint`` anchors that pin
+GSPMD's propagation at the layer boundaries.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    dp_axes: Tuple[str, ...] = ("data",)   # batch axes, e.g. ("pod", "data")
+    tp_axis: str = "model"
+    seq_axis: Optional[str] = None          # set for sequence-parallel decode
+
+
+_current: Optional[ShardingCtx] = None
+
+
+@contextlib.contextmanager
+def set_ctx(ctx: Optional[ShardingCtx]):
+    global _current
+    prev = _current
+    _current = ctx
+    try:
+        yield
+    finally:
+        _current = prev
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return _current
+
+
+def _constrain(x, spec: P):
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _divisible(dim: int, ax) -> bool:
+    from repro.sharding.specs import MESH_SIZES
+
+    if ax is None:
+        return True
+    axes = ax if isinstance(ax, (tuple, list)) else (ax,)
+    n = 1
+    for a in axes:
+        n *= MESH_SIZES[a]
+    return dim % n == 0
+
+
+def shard_batch_seq(x):
+    """(B, S, ...) activations: batch over dp axes, seq over seq_axis
+    (Megatron-style sequence parallelism — the residual stream and its
+    per-layer remat checkpoints are model-axis sharded between blocks)."""
+    c = _current
+    if c is None:
+        return x
+    dp = c.dp_axes if (c.dp_axes and _divisible(x.shape[0], c.dp_axes)) else None
+    seq = c.seq_axis if _divisible(x.shape[1], c.seq_axis) else None
+    rest = (None,) * (x.ndim - 2)
+    return _constrain(x, P(dp, seq, *rest))
+
+
+def shard_heads(x, head_axis: int = 2):
+    """(B, S, H, ...) per-head tensors: heads over tp when divisible (MLA's
+    H=128 materialised K/V; replicated otherwise by the divisibility check)."""
+    c = _current
+    if c is None or not _divisible(x.shape[head_axis], c.tp_axis):
+        return x
+    dp = c.dp_axes if (c.dp_axes and _divisible(x.shape[0], c.dp_axes)) else None
+    spec = [None] * x.ndim
+    spec[0] = dp
+    spec[head_axis] = c.tp_axis
+    return _constrain(x, P(*spec))
+
+
+def shard_logits(x):
+    """(B, S, V) logits: batch over dp, vocab over tp (vocab wins the model
+    axis over sequence — CE is vocab-reduction-heavy)."""
+    c = _current
+    if c is None:
+        return x
+    dp = c.dp_axes if (c.dp_axes and _divisible(x.shape[0], c.dp_axes)) else None
+    return _constrain(x, P(dp, None, c.tp_axis))
+
+
+def shard_expert(x):
+    """(E, C, d) MoE buffers: experts over tp."""
+    c = _current
+    if c is None:
+        return x
+    rest = (None,) * (x.ndim - 1)
+    return _constrain(x, P(c.tp_axis, *rest))

@@ -1,0 +1,244 @@
+"""PartitionSpec rules for parameters, optimizer state, and serve caches.
+
+Policy (Megatron-style TP over `model` + DP over ('pod','data'), optional
+FSDP over `data` for the >=14B archs):
+  * attention/FFN projections: contracting d_model dim replicated, the
+    head/ffn output dim sharded over `model`; the out-projection shards its
+    input dim (so the pair produces one all-reduce per block);
+  * MoE expert tensors: expert axis over `model` (expert parallelism) when E
+    divides the axis, else the per-expert ffn dim (granite's E=40 vs 16);
+  * embeddings/unembedding: padded vocab (ArchConfig.vocab_pad) over `model`;
+  * FSDP (cfg.fsdp): `data` is added to the first still-unsharded divisible
+    dim of each weight (ZeRO-3-ish; gathered layer-by-layer inside the scan);
+  * KV caches: batch over dp axes, head_dim over `model` (the per-arch KV
+    head counts 2/5/8/10/16 do not divide a 16-way axis; head_dim 64/128
+    always does); the batch=1 long-context shape shards the cache SEQUENCE
+    over `data` instead (sequence-parallel decode).
+
+Every spec passes a divisibility sanitizer (pjit rejects uneven *input*
+shardings): any axis that does not divide its dim is dropped to replication.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+
+MESH_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axis_size(ax, sizes: Dict[str, int]) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= sizes[a]
+        return n
+    return sizes[ax]
+
+
+def sanitize(spec: P, shape: Tuple[int, ...], sizes: Dict[str, int] = MESH_SIZES) -> P:
+    """Drop any spec axis whose size does not divide the dim."""
+    axes = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, axes):
+        out.append(ax if (ax is not None and dim % _axis_size(ax, sizes) == 0) else None)
+    return P(*out)
+
+
+def _add_fsdp(spec: P, shape: Tuple[int, ...], sizes: Dict[str, int],
+              multi_pod: bool = False) -> P:
+    """Add the dp axes to the largest unsharded divisible dim (ZeRO-3-ish)."""
+    candidates = (("pod", "data"), ("data",)) if multi_pod else (("data",),)
+    axes = list(spec) + [None] * (len(shape) - len(spec))
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for cand in candidates:
+        n = 1
+        for a in cand:
+            n *= sizes[a]
+        for i in order:
+            if axes[i] is None and shape[i] % n == 0 and shape[i] >= n:
+                axes[i] = cand if len(cand) > 1 else cand[0]
+                return P(*axes)
+    return P(*axes)
+
+
+def _add_axis(spec: P, shape: Tuple[int, ...], sizes: Dict[str, int], axis: str) -> P:
+    """Add one named axis to the largest unsharded divisible dim."""
+    axes = list(spec) + [None] * (len(shape) - len(spec))
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if axes[i] is None and shape[i] % sizes[axis] == 0 and shape[i] >= sizes[axis]:
+            axes[i] = axis
+            return P(*axes)
+    return P(*axes)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _param_rule(path: str, shape: Tuple[int, ...], cfg: ArchConfig, tp: str):
+    """Base (pre-sanitize, pre-FSDP) spec for one parameter leaf."""
+    stacked = path.startswith("layers") or path.startswith("enc_layers")
+    lead: Tuple = (None,) if stacked else ()
+    body = len(shape) - len(lead)
+    name = path.split("/")[-1]
+
+    def spec(*axes):
+        return P(*lead, *axes)
+
+    # embeddings / head / positions ---------------------------------------
+    if name == "embed":
+        return P(tp, None)
+    if name == "head":
+        return P(None, tp)
+    if name in ("pos_embed", "enc_pos_embed"):
+        return P(None, None)
+    # MoE ------------------------------------------------------------------
+    if "moe" in path and name in ("w_gate", "w_up", "w_down"):
+        E = shape[len(lead)]
+        if E % MESH_SIZES["model"] == 0:
+            return spec(tp, None, None)        # expert parallelism
+        # fallback: shard the per-expert ffn dim
+        if name == "w_down":
+            return spec(None, tp, None)        # (E, f, d)
+        return spec(None, None, tp)            # (E, d, f)
+    if name == "router":
+        return spec(None, None)                # E often non-divisible; tiny
+    # attention ------------------------------------------------------------
+    if name in ("wq", "wk", "wv", "w_uq", "w_uk", "w_uv", "w_in"):
+        return spec(None, tp)
+    if name in ("wo", "w_out"):
+        return spec(tp, None)
+    if name in ("w_dq", "w_dkv", "w_kpe"):
+        return spec(None, None)                # small latent projections
+    if name == "bonus_u":
+        return spec(None, None)                # (H, hd): H rarely divides
+    # rwkv -----------------------------------------------------------------
+    if name in ("w_r", "w_k", "w_v", "w_g"):
+        return spec(None, tp)
+    if name == "w_o":
+        return spec(tp, None)
+    if name == "decay_lora_a":
+        return spec(None, None)
+    if name == "decay_lora_b":
+        return spec(None, tp)
+    # mamba ----------------------------------------------------------------
+    if name in ("w_bcdt", "A_log"):
+        return spec(tp, None)                  # (di, ...)
+    if name == "D":
+        return spec(tp)
+    if name == "ln_out" and "mamba" in path:
+        return spec(tp)                        # over di
+    # dense mlp ------------------------------------------------------------
+    if name in ("w_gate", "w_up"):
+        return spec(None, tp)                  # (D, F)
+    if name == "w_down":
+        return spec(tp, None)                  # (F, D)
+    # norms / vectors --------------------------------------------------------
+    return spec(*([None] * body))
+
+
+def param_shardings(
+    params_shape: Any, cfg: ArchConfig, multi_pod: bool,
+    sizes: Dict[str, int] = MESH_SIZES,
+) -> Any:
+    """Pytree of PartitionSpec matching a params(-shaped) pytree."""
+    tp = "model"
+
+    def rule(path, leaf):
+        pstr = _path_str(path)
+        spec = _param_rule(pstr, tuple(leaf.shape), cfg, tp)
+        spec = sanitize(spec, tuple(leaf.shape), sizes)
+        if getattr(cfg, "pure_fsdp", False) and (
+            pstr.startswith("layers") or pstr.startswith("enc_layers")
+        ):
+            # weight-gathered parallelism: strip TP from layer weights; the
+            # (small) weights are all-gathered per layer instead of the
+            # (large) activations — wins when head counts don't divide the
+            # model axis (rwkv6's 40 heads; §Perf pair B)
+            spec = P(*(None if a == tp else a for a in spec))
+            spec = _add_fsdp(spec, tuple(leaf.shape), sizes, multi_pod)
+            # also spread over the model axis for memory when possible
+            spec = _add_axis(spec, tuple(leaf.shape), sizes, "model")
+        elif cfg.fsdp:
+            spec = _add_fsdp(spec, tuple(leaf.shape), sizes, multi_pod)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_shardings(params_specs: Any) -> Any:
+    """Adam m/v follow the parameter shardings."""
+    return params_specs
+
+
+def batch_shardings(cfg: ArchConfig, shape: InputShape, multi_pod: bool) -> Any:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    if shape.global_batch == 1 or (shape.global_batch % (32 if multi_pod else 16)) != 0:
+        # batch must divide the dp axes; fall back to 'data' only, else replicate
+        if shape.global_batch % 16 == 0:
+            dp = ("data",)
+        else:
+            dp = ()
+    tok = P(dp if dp else None)
+    if shape.is_decode:
+        return {"tokens": tok}
+    out = {"tokens": tok, "labels": tok}
+    if cfg.frontend != "none" or cfg.kind == "encdec":
+        out["prefix_embeds"] = P(dp if dp else None, None, None)
+    return out
+
+
+def cache_shardings(cache_shape: Any, cfg: ArchConfig, shape: InputShape, multi_pod: bool) -> Any:
+    """Specs for the serve cache pytree (see models.lm.init_cache layouts)."""
+    dp: Tuple = ("pod", "data") if multi_pod else ("data",)
+    if shape.global_batch % (32 if multi_pod else 16) != 0:
+        dp = ("data",) if shape.global_batch % 16 == 0 else ()
+    seq_parallel = shape.global_batch == 1
+    b_ax = None if (seq_parallel or not dp) else dp
+    s_ax = "data" if seq_parallel else None
+    tp = "model"
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        shp = tuple(leaf.shape)
+        if name.endswith("kpos"):
+            return sanitize(P(s_ax), shp)
+        if name.endswith("pos"):
+            return P()
+        if name.endswith("/k") or name.endswith("/v") or "cross_" in name:
+            # (L, B, Sc, KV, hd): head_dim over model (KV counts rarely divide)
+            return sanitize(P(None, b_ax, s_ax, None, tp), shp)
+        if name.endswith("c_kv"):                            # (L, B, Sc, r_kv)
+            return sanitize(P(None, b_ax, s_ax, tp), shp)
+        if name.endswith("k_pe"):                            # (L, B, Sc, dr)
+            return sanitize(P(None, b_ax, s_ax, None), shp)
+        if name.endswith("wkv"):                             # (L, B, H, hd, hd)
+            return sanitize(P(None, b_ax, None, tp, None), shp)
+        if name.endswith("shift"):                           # (L, B, D)
+            return sanitize(P(None, b_ax, tp), shp)
+        if name.endswith("mamba_h"):                         # (L, B, di, N)
+            return sanitize(P(None, b_ax, tp, None), shp)
+        if name.endswith("enc_out"):                         # (B, P, D)
+            return sanitize(P(b_ax, None, None), shp)
+        if nd >= 2:
+            return sanitize(P(None, b_ax, *([None] * (nd - 2))), shp)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)

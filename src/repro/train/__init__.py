@@ -1,0 +1,10 @@
+from repro.train.trainer import TrainState, make_train_step, train_state_init
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+__all__ = [
+    "TrainState",
+    "train_state_init",
+    "make_train_step",
+    "save_checkpoint",
+    "load_checkpoint",
+]

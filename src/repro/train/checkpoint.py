@@ -1,0 +1,53 @@
+"""Checkpointing: flatten the state pytree to path-keyed arrays in an .npz.
+
+Pure numpy (no orbax in the image); good enough for single-host restarts and
+the examples.  Multi-host note: each host saves its addressable shards under
+``<dir>/shard<k>.npz``; on this container there is one host/one file.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, state: Any, step: int) -> str:
+    os.makedirs(path, exist_ok=True)
+    fname = os.path.join(path, f"step{step:08d}.npz")
+    np.savez(fname, **_flatten(state))
+    with open(os.path.join(path, "LATEST"), "w") as f:
+        f.write(os.path.basename(fname))
+    return fname
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of `like` (a state pytree or eval_shape)."""
+    with open(os.path.join(path, "LATEST")) as f:
+        fname = os.path.join(path, f.read().strip())
+    data = np.load(fname)
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    restored = []
+    for path_keys, leaf in leaves_like:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_keys)
+        arr = data[key]
+        restored.append(jnp.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+    step = int(fname.rsplit("step", 1)[1].split(".")[0])
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), restored
+    ), step

@@ -1,0 +1,4 @@
+from repro.utils.registry import Registry
+from repro.utils.logging import get_logger
+
+__all__ = ["Registry", "get_logger"]

@@ -1,0 +1,46 @@
+"""Pytree helpers shared by trainer / checkpointing / dry-run."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves (works for ShapeDtypeStruct too)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_params(tree: Any) -> int:
+    """Total element count of all array leaves."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(leaf.shape)) for leaf in leaves if hasattr(leaf, "shape"))
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree: Any, s) -> Any:
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def tree_finite(tree: Any) -> jax.Array:
+    """Scalar bool: every leaf is finite."""
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree_util.tree_leaves(tree)]
+    out = jnp.array(True)
+    for l in leaves:
+        out = jnp.logical_and(out, l)
+    return out

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# NOTE: no XLA_FLAGS / device-count override here — smoke tests and benches
+# must see the 1 real CPU device (the 512-device mesh lives ONLY in
+# repro.launch.dryrun, which sets the flag before importing jax).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,37 @@
+"""CommLedger unit tests + Algorithm 1 accounting bounds."""
+
+import pytest
+
+from repro.core.comm import CommLedger, theoretical_dis_cost
+
+
+def test_ledger_totals():
+    led = CommLedger()
+    led.party_to_server("x", 0, 10)
+    led.server_to_party("y", 1, 5)
+    led.broadcast("z", 3, 2)
+    assert led.total == 10 + 5 + 6
+    assert led.by_tag()["z"] == 6
+    assert led.by_prefix("") == led.total
+
+
+def test_ledger_rejects_negative():
+    led = CommLedger()
+    with pytest.raises(ValueError):
+        led.send("bad", "server", "party:0", -1)
+
+
+def test_merge_and_fork():
+    led = CommLedger()
+    sub = led.fork()
+    sub.party_to_server("a", 0, 7)
+    assert led.total == 0
+    led.merge(sub)
+    assert led.total == 7
+
+
+def test_theoretical_bounds_monotone():
+    lo1, hi1 = theoretical_dis_cost(100, 3)
+    lo2, hi2 = theoretical_dis_cost(200, 3)
+    assert lo1 <= hi1 and lo2 <= hi2
+    assert lo2 > lo1 and hi2 > hi1

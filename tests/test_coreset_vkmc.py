@@ -1,0 +1,80 @@
+"""End-to-end coreset quality for VKMC (Algorithm 3) + DistDim baseline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    CommLedger,
+    VFLDataset,
+    build_uniform_coreset,
+    build_vkmc_coreset,
+    distdim,
+    kmeans,
+    kmeans_cost,
+    vkmc_coreset_ratio,
+)
+from repro.data.synthetic import correlated_vfl_data
+
+
+def _clustered(key, n=3000, d=12, T=3, k=5, rho=0.8):
+    X = correlated_vfl_data(key, n, d, T, cross_correlation=rho, k_clusters=k)
+    return VFLDataset.from_dense(X, None, T=T)
+
+
+def test_vkmc_coreset_solution_quality():
+    k = 5
+    ds = _clustered(jax.random.PRNGKey(0), k=k)
+    cs = build_vkmc_coreset(jax.random.PRNGKey(1), ds, k=k, m=500)
+    XS, _, w = cs.materialize(ds)
+    cent_full = kmeans(jax.random.PRNGKey(2), ds.full(), k)
+    cent_cs = kmeans(jax.random.PRNGKey(2), XS, k, w)
+    c_full = float(kmeans_cost(ds.full(), cent_full))
+    c_cs = float(kmeans_cost(ds.full(), cent_cs))
+    assert c_cs <= 1.15 * c_full, (c_cs, c_full)
+
+
+def test_vkmc_coreset_epsilon_over_probe_centers():
+    k = 4
+    ds = _clustered(jax.random.PRNGKey(3), n=1500, k=k)
+    cs = build_vkmc_coreset(jax.random.PRNGKey(4), ds, k=k, m=600)
+    C_probe = jax.random.normal(jax.random.PRNGKey(5), (10, k, ds.d)) * 2.0
+    eps = float(vkmc_coreset_ratio(ds, cs, C_probe))
+    assert eps < 0.5, eps
+
+
+def test_vkmc_coreset_beats_uniform():
+    k = 6
+    ds = _clustered(jax.random.PRNGKey(6), n=4000, k=k, rho=0.9)
+
+    def cost_of(builder, seed, **kw):
+        cs = builder(jax.random.PRNGKey(seed), ds, **kw)
+        XS, _, w = cs.materialize(ds)
+        cent = kmeans(jax.random.PRNGKey(7), XS, k, w)
+        return float(kmeans_cost(ds.full(), cent))
+
+    cs_c = np.mean([cost_of(build_vkmc_coreset, s, k=k, m=120) for s in range(6)])
+    un_c = np.mean([cost_of(build_uniform_coreset, s + 50, m=120) for s in range(6)])
+    assert cs_c <= un_c * 1.03, (cs_c, un_c)
+
+
+def test_distdim_runs_and_costs_linear_comm():
+    k = 4
+    ds = _clustered(jax.random.PRNGKey(8), n=800, k=k)
+    led = CommLedger()
+    cent = distdim(jax.random.PRNGKey(9), ds, k, ledger=led)
+    assert cent.shape == (k, ds.d)
+    # Ding et al. cost: assignments n per party + local centers
+    assert led.total >= ds.n * ds.T
+    c = float(kmeans_cost(ds.full(), cent))
+    c_central = float(kmeans_cost(ds.full(), kmeans(jax.random.PRNGKey(10), ds.full(), k)))
+    assert c <= 3.0 * c_central       # constant-approx regime
+
+
+def test_coreset_comm_much_smaller_than_distdim():
+    k = 4
+    ds = _clustered(jax.random.PRNGKey(11), n=5000, k=k)
+    led_cs, led_dd = CommLedger(), CommLedger()
+    build_vkmc_coreset(jax.random.PRNGKey(12), ds, k=k, m=200, ledger=led_cs)
+    distdim(jax.random.PRNGKey(13), ds, k, ledger=led_dd)
+    assert led_cs.total < led_dd.total / 5

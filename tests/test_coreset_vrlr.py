@@ -1,0 +1,76 @@
+"""End-to-end coreset quality for VRLR (Algorithm 2 + Theorem 2.5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    CommLedger,
+    VFLDataset,
+    build_uniform_coreset,
+    build_vrlr_coreset,
+    ridge_closed_form,
+    ridge_cost,
+    vrlr_coreset_ratio,
+)
+
+
+def _dataset(key, n=3000, d=12, T=3, noise=0.1, heavy=True):
+    kx, kt, kn, kh = jax.random.split(key, 4)
+    X = jax.random.normal(kx, (n, d))
+    if heavy:
+        # heavy-tailed rows -> leverage scores differ, coreset should win
+        scale = jax.random.uniform(kh, (n, 1)) ** (-0.5)
+        X = X * (1 + 0.2 * scale)
+    theta = jax.random.normal(kt, (d,))
+    y = X @ theta + noise * jax.random.normal(kn, (n,))
+    return VFLDataset.from_dense(X, y, T=T)
+
+
+def test_coreset_near_optimal_solution():
+    ds = _dataset(jax.random.PRNGKey(0))
+    lam = 0.1 * ds.n
+    cs = build_vrlr_coreset(jax.random.PRNGKey(1), ds, m=400)
+    XS, yS, w = cs.materialize(ds)
+    th_full = ridge_closed_form(ds.full(), ds.y, lam)
+    th_cs = ridge_closed_form(XS, yS, lam, w)
+    c_full = float(ridge_cost(ds.full(), ds.y, th_full, lam))
+    c_cs = float(ridge_cost(ds.full(), ds.y, th_cs, lam))
+    assert c_cs <= 1.10 * c_full, (c_cs, c_full)
+
+
+def test_coreset_epsilon_over_probe_thetas():
+    ds = _dataset(jax.random.PRNGKey(2), n=2000)
+    lam = 0.1 * ds.n
+    cs = build_vrlr_coreset(jax.random.PRNGKey(3), ds, m=600)
+    thetas = jax.random.normal(jax.random.PRNGKey(4), (24, ds.d))
+    eps = float(vrlr_coreset_ratio(ds, cs, thetas, lam))
+    assert eps < 0.5, eps
+
+
+def test_coreset_beats_uniform_on_heavy_tails():
+    """Paper claim: C-* <= U-* at the same m (averaged over seeds)."""
+    ds = _dataset(jax.random.PRNGKey(5), n=4000, heavy=True)
+    lam = 0.1 * ds.n
+    th_full = ridge_closed_form(ds.full(), ds.y, lam)
+    c_full = float(ridge_cost(ds.full(), ds.y, th_full, lam))
+
+    def excess(builder, seed):
+        cs = builder(jax.random.PRNGKey(seed), ds, 150)
+        XS, yS, w = cs.materialize(ds)
+        th = ridge_closed_form(XS, yS, lam, w)
+        return float(ridge_cost(ds.full(), ds.y, th, lam)) - c_full
+
+    cs_ex = np.mean([excess(build_vrlr_coreset, s) for s in range(8)])
+    un_ex = np.mean([excess(build_uniform_coreset, s + 100) for s in range(8)])
+    assert cs_ex <= un_ex * 1.05, (cs_ex, un_ex)
+
+
+def test_construction_comm_independent_of_n():
+    """O(mT) communication — the paper's headline property."""
+    led_small, led_big = CommLedger(), CommLedger()
+    build_vrlr_coreset(jax.random.PRNGKey(6), _dataset(jax.random.PRNGKey(7), n=1000),
+                       m=100, ledger=led_small)
+    build_vrlr_coreset(jax.random.PRNGKey(8), _dataset(jax.random.PRNGKey(9), n=4000),
+                       m=100, ledger=led_big)
+    assert led_small.total == led_big.total

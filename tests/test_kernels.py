@@ -1,0 +1,66 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode on CPU) vs the
+pure-jnp oracles in kernels/ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES_NK = [(17, 3, 5), (128, 8, 32), (300, 13, 90), (1000, 64, 7), (257, 10, 129)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("n,k,d", SHAPES_NK)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_kmeans_assign_sweep(n, k, d, dtype):
+    kx, kc = jax.random.split(jax.random.PRNGKey(n * 31 + k))
+    X = jax.random.normal(kx, (n, d), dtype)
+    C = jax.random.normal(kc, (k, d), dtype)
+    a_k, d_k = ops.kmeans_assign(X, C)
+    a_r, d_r = ref.kmeans_assign(X, C)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=tol, atol=tol)
+    # argmin may differ on exact ties under reordered float math: check the
+    # CHOSEN distance is (near-)minimal instead of index equality
+    d_all = np.asarray(ref.kmeans_assign(X, C)[1])
+    chosen = np.asarray(
+        jnp.sum((X.astype(jnp.float32) - C.astype(jnp.float32)[np.asarray(a_k)]) ** 2, axis=1))
+    np.testing.assert_allclose(chosen, d_all, rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("n,d", [(16, 4), (200, 30), (513, 90), (64, 128), (1000, 18)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_leverage_sweep(n, d, dtype):
+    kx, km = jax.random.split(jax.random.PRNGKey(n + d))
+    X = jax.random.normal(kx, (n, d), dtype)
+    A = jax.random.normal(km, (d, d), jnp.float32)
+    M = A @ A.T / d
+    out_k = ops.leverage(X, M)
+    out_r = ref.leverage(X, M)
+    tol = 1e-3 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,d", [(16, 4), (300, 30), (700, 90), (128, 128)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_weighted_gram_sweep(n, d, dtype):
+    kx, kw = jax.random.split(jax.random.PRNGKey(n * 7 + d))
+    X = jax.random.normal(kx, (n, d), dtype)
+    w = jax.random.uniform(kw, (n,))
+    out_k = ops.weighted_gram(X, w)
+    out_r = ref.weighted_gram(X, w)
+    tol = 1e-3 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=tol, atol=tol * d)
+
+
+def test_block_size_invariance():
+    """Tiling must not change results (block boundary correctness)."""
+    X = jax.random.normal(jax.random.PRNGKey(0), (517, 33))
+    C = jax.random.normal(jax.random.PRNGKey(1), (9, 33))
+    a1, d1 = ops.kmeans_assign(X, C, block_n=64)
+    a2, d2 = ops.kmeans_assign(X, C, block_n=512)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)

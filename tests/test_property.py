@@ -1,0 +1,97 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core.comm import CommLedger, theoretical_dis_cost
+from repro.core.dis import dis_sample
+from repro.core.selector import SelectorConfig, local_scores, sample_coreset
+from repro.core.vfl import split_columns
+from repro.sharding.specs import MESH_SIZES, sanitize
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(1, 64), st.integers(1, 6))
+@settings(**SETTINGS)
+def test_split_columns_partition(d, T):
+    if T > d:
+        T = d
+    slices = split_columns(d, T)
+    cover = sorted(i for s in slices for i in range(s.start, s.stop))
+    assert cover == list(range(d))
+    assert len(slices) == T
+
+
+@given(st.integers(2, 40), st.integers(1, 4), st.integers(1, 60),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_dis_protocol_invariants(n, T, m, seed):
+    key = jax.random.PRNGKey(seed)
+    scores = [jax.random.uniform(jax.random.fold_in(key, j), (n,)) + 1e-3
+              for j in range(T)]
+    led = CommLedger()
+    S, w = dis_sample(jax.random.fold_in(key, 99), scores, m, led)
+    assert S.shape == (m,) and w.shape == (m,)
+    assert bool(jnp.all((S >= 0) & (S < n)))
+    assert bool(jnp.all(w > 0))
+    lo, hi = theoretical_dis_cost(m, T)
+    assert lo <= led.total <= hi
+    # weight identity: w_i * m * g_i == G for every sample
+    g = jnp.sum(jnp.stack(scores), 0)
+    np.testing.assert_allclose(np.asarray(w * m * g[S]),
+                               float(g.sum()), rtol=1e-4)
+
+
+@given(st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+       st.integers(0, 2))
+@settings(**SETTINGS)
+def test_sanitize_always_divisible(dims, n_axes):
+    axes = ["model", "data", ("pod", "data")][: n_axes + 1]
+    spec = P(*(axes[i % len(axes)] for i in range(len(dims))))
+    out = sanitize(spec, tuple(dims))
+    for dim, ax in zip(dims, tuple(out) + (None,) * (len(dims) - len(out))):
+        if ax is None:
+            continue
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= MESH_SIZES[a]
+        assert dim % size == 0
+
+
+@given(st.integers(2, 32), st.integers(1, 16), st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_selector_weights_unbiased_scale(B, d, seed):
+    key = jax.random.PRNGKey(seed)
+    feats = jax.random.normal(key, (B, d))
+    g = local_scores(feats, "norm", 1e-4)
+    m = max(1, B // 2)
+    S, w = sample_coreset(jax.random.fold_in(key, 1), g, m)
+    # E[sum w] = B; single-draw bound: every weight is positive and finite
+    assert bool(jnp.all(w > 0)) and bool(jnp.all(jnp.isfinite(w)))
+    assert S.shape == (m,)
+
+
+@given(st.integers(1, 200), st.integers(1, 199))
+@settings(**SETTINGS)
+def test_selector_m_of(B, pct):
+    cfg = SelectorConfig(fraction=pct / 100)
+    m = cfg.m_of(B)
+    assert 1 <= m <= 2 * B
+
+
+@given(st.integers(4, 64), st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_dis_estimator_positive_combination(n, T, seed):
+    """Coreset cost estimates of a non-negative objective stay non-negative
+    and finite for arbitrary scores."""
+    key = jax.random.PRNGKey(seed)
+    scores = [jax.random.uniform(jax.random.fold_in(key, j), (n,)) + 1e-6
+              for j in range(T)]
+    f = jax.random.uniform(jax.random.fold_in(key, 777), (n,))
+    S, w = dis_sample(jax.random.fold_in(key, 1), scores, max(1, n // 2))
+    est = jnp.sum(w * f[S])
+    assert bool(est >= 0) and bool(jnp.isfinite(est))

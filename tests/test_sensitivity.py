@@ -1,0 +1,74 @@
+"""Algorithm 2/3 local scores: leverage properties + sensitivity bounds."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sensitivity import (
+    kmeans_assignment,
+    leverage_scores,
+    total_sensitivity_bound_vkmc,
+    total_sensitivity_bound_vrlr,
+    vkmc_local_scores,
+    vrlr_local_scores,
+)
+from repro.core.vkmc import kmeans
+
+
+def test_leverage_in_unit_interval_and_sums_to_rank():
+    X = jax.random.normal(jax.random.PRNGKey(0), (200, 7))
+    lev = np.asarray(leverage_scores(X))
+    assert np.all(lev >= 0) and np.all(lev <= 1 + 1e-6)
+    np.testing.assert_allclose(lev.sum(), 7.0, rtol=1e-3)   # full column rank
+
+
+def test_leverage_matches_qr():
+    X = jax.random.normal(jax.random.PRNGKey(1), (80, 5))
+    q, _ = jnp.linalg.qr(X)
+    np.testing.assert_allclose(
+        np.asarray(leverage_scores(X)), np.asarray(jnp.sum(q * q, axis=1)),
+        rtol=1e-3, atol=1e-5)
+
+
+def test_leverage_rank_deficient():
+    X = jax.random.normal(jax.random.PRNGKey(2), (60, 4))
+    X = jnp.concatenate([X, X[:, :2]], axis=1)              # rank 4, d=6
+    lev = np.asarray(leverage_scores(X))
+    np.testing.assert_allclose(lev.sum(), 4.0, rtol=1e-2)
+
+
+def test_vrlr_scores_include_floor_and_bound():
+    n = 150
+    X = jax.random.normal(jax.random.PRNGKey(3), (n, 6))
+    y = jax.random.normal(jax.random.PRNGKey(4), (n,))
+    g = np.asarray(vrlr_local_scores(X, y))
+    assert np.all(g >= 1.0 / n)
+    # total <= d'_j + 1  (d'_j = rank([X, y]) = 7)
+    assert g.sum() <= 7 + 1 + 1e-3
+    assert g.sum() >= 6.0     # near-full rank data
+
+
+def test_vkmc_total_sensitivity_exact():
+    """Lemma F.2: sum_i g_i^(j) = 2(k+1) * alpha per party (exactly)."""
+    k, alpha = 4, 2.0
+    X = jax.random.normal(jax.random.PRNGKey(5), (300, 8))
+    centers = kmeans(jax.random.PRNGKey(6), X, k, iters=5)
+    g = np.asarray(vkmc_local_scores(X, centers, alpha))
+    assert np.all(g > 0)
+    np.testing.assert_allclose(g.sum(), 2 * (k + 1) * alpha, rtol=1e-4)
+    assert abs(total_sensitivity_bound_vkmc(k, 1, alpha) - g.sum()) < 1e-3
+
+
+def test_total_sensitivity_bounds_helpers():
+    assert total_sensitivity_bound_vrlr((3, 3, 4), 3) == 13.0
+    assert total_sensitivity_bound_vkmc(10, 3, 2.0) == 132.0
+
+
+def test_kmeans_assignment_correct():
+    X = jax.random.normal(jax.random.PRNGKey(7), (100, 5))
+    C = jax.random.normal(jax.random.PRNGKey(8), (7, 5))
+    a, d2 = kmeans_assignment(X, C)
+    d_all = np.asarray(
+        jnp.sum((X[:, None, :] - C[None, :, :]) ** 2, axis=-1))
+    np.testing.assert_array_equal(np.asarray(a), d_all.argmin(1))
+    np.testing.assert_allclose(np.asarray(d2), d_all.min(1), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,93 @@
+"""Sharding-spec unit tests: every (arch x shape x mesh) spec tree is
+divisibility-valid — the invariant pjit enforces on inputs."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, all_arch_names, get_arch
+from repro.launch.inputs import cache_specs, state_specs
+from repro.models import api as model_api
+from repro.sharding.specs import (
+    MESH_SIZES,
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    sanitize,
+)
+
+
+def _axis_product(ax):
+    if ax is None:
+        return 1
+    axes = ax if isinstance(ax, (tuple, list)) else (ax,)
+    n = 1
+    for a in axes:
+        n *= MESH_SIZES[a]
+    return n
+
+
+def _check_tree(shape_tree, spec_tree):
+    leaves_s = jax.tree_util.tree_leaves(shape_tree)
+    leaves_p = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_s) == len(leaves_p)
+    for sds, spec in zip(leaves_s, leaves_p):
+        axes = tuple(spec) + (None,) * (len(sds.shape) - len(spec))
+        for dim, ax in zip(sds.shape, axes):
+            assert dim % _axis_product(ax) == 0, (sds.shape, spec)
+
+
+@pytest.mark.parametrize("arch", all_arch_names())
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_shardings_divisible(arch, multi_pod):
+    cfg = get_arch(arch)
+    pshape = jax.eval_shape(lambda k: model_api.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = param_shardings(pshape, cfg, multi_pod)
+    _check_tree(pshape, specs)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "deepseek-v2-236b", "rwkv6-3b",
+                                  "hymba-1.5b", "whisper-medium"])
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_shardings_divisible(arch, shape_name):
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_arch(arch).for_shape(shape)
+    if shape_name == "long_500k" and arch == "whisper-medium":
+        pytest.skip("whisper long_500k skipped by design")
+    cshape = cache_specs(cfg, shape)
+    specs = cache_shardings(cshape, cfg, shape, multi_pod=False)
+    _check_tree(cshape, specs)
+
+
+def test_sanitize_drops_uneven():
+    assert sanitize(P("model"), (40,)) == P(None)
+    assert sanitize(P("model"), (64,)) == P("model")
+    assert sanitize(P(("pod", "data")), (64,)) == P(("pod", "data"))
+    assert sanitize(P(("pod", "data")), (48,)) == P(None)
+
+
+def test_expert_sharding_policy():
+    """deepseek (E=160) experts go expert-parallel; granite (E=40) falls back
+    to ffn-dim sharding."""
+    ds = get_arch("deepseek-v2-236b")
+    gr = get_arch("granite-moe-3b-a800m")
+    for cfg, expert_parallel in ((ds, True), (gr, False)):
+        pshape = jax.eval_shape(lambda k: model_api.init_params(k, cfg),
+                                jax.random.PRNGKey(0))
+        specs = param_shardings(pshape, cfg, False)
+        wg = specs["layers"]["moe"]["w_gate"]
+        if expert_parallel:
+            assert wg[1] == "model", wg
+        else:
+            assert wg[1] != "model" and "model" in tuple(wg), wg
+
+
+def test_batch_shardings_all_shapes():
+    for arch in ("llama3.2-1b", "internvl2-26b", "whisper-medium"):
+        cfg = get_arch(arch)
+        for shape in INPUT_SHAPES.values():
+            for mp in (False, True):
+                specs = batch_shardings(cfg, shape, mp)
+                assert "tokens" in specs

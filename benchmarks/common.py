@@ -26,9 +26,7 @@ import numpy as np
 from repro.core import (
     CommLedger,
     VFLDataset,
-    build_uniform_coreset,
-    build_vkmc_coreset,
-    build_vrlr_coreset,
+    build_coreset,
     central_comm_cost,
     ridge_closed_form,
     ridge_cost,
@@ -127,11 +125,8 @@ def run_vrlr_method(
         central_comm_cost(n, train.dims, led)
         eff_lam, eff_l1, eff_l2 = lam, lam1, lam2
     else:
-        builder = build_vrlr_coreset if sampling == "coreset" else build_uniform_coreset
-        if sampling == "coreset":
-            cs = builder(key, train, m, ledger=led)
-        else:
-            cs = builder(key, train, m, ledger=led)
+        task = "vrlr" if sampling == "coreset" else "uniform"
+        cs = build_coreset(task, train, m, key=key, ledger=led)
         X, y, w = cs.materialize(train)
         for j in range(train.T):            # ship the m selected rows
             led.party_to_server("materialize/rows", j, m * train.dims[j])
@@ -178,11 +173,10 @@ def run_vkmc_method(
         else:
             centers = distdim(key, ds, k, ledger=led)
     else:
-        builder = build_vkmc_coreset if sampling == "coreset" else build_uniform_coreset
         if sampling == "coreset":
-            cs = builder(key, ds, k=k, m=m, ledger=led)
+            cs = build_coreset("vkmc", ds, m, key=key, k=k, ledger=led)
         else:
-            cs = builder(key, ds, m=m, ledger=led)
+            cs = build_coreset("uniform", ds, m, key=key, ledger=led)
         XS, _, w = cs.materialize(ds)
         for j in range(ds.T):
             led.party_to_server("materialize/rows", j, m * ds.dims[j])

@@ -1,8 +1,10 @@
-"""Quickstart: the paper's pipeline end-to-end in ~40 lines.
+"""Quickstart: the paper's pipeline end-to-end in ~50 lines.
 
 Builds a vertically-partitioned dataset (3 parties), constructs a VRLR
-coreset with Algorithm 2 + DIS, solves ridge regression on the coreset, and
-compares cost + communication against the full-data CENTRAL baseline.
+coreset through the unified ``build_coreset`` API (Algorithm 2 + DIS),
+solves ridge regression on the coreset, compares cost + communication
+against the full-data CENTRAL baseline — then sweeps seeds x budgets in a
+single compiled call with ``build_coresets_batched``.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,7 +18,8 @@ import jax.numpy as jnp
 from repro.core import (
     CommLedger,
     VFLDataset,
-    build_vrlr_coreset,
+    build_coreset,
+    build_coresets_batched,
     central_comm_cost,
     ridge_closed_form,
     ridge_cost,
@@ -38,11 +41,12 @@ def main() -> None:
     theta_full = ridge_closed_form(ds.full(), ds.y, lam)
     cost_full = float(ridge_cost(ds.full(), ds.y, theta_full, lam))
 
-    # --- coreset (Algorithm 2 + DIS) ---------------------------------------
+    # --- coreset (Algorithm 2 + DIS, via the task registry) ----------------
     led_cs = CommLedger()
-    cs = build_vrlr_coreset(jax.random.fold_in(key, 3), ds, m=m, ledger=led_cs)
+    cs = build_coreset("vrlr", ds, m, key=jax.random.fold_in(key, 3),
+                       ledger=led_cs)
     XS, yS, w = cs.materialize(ds)
-    for j in range(T):                        # Thm 2.5: ship the m rows
+    for j in range(T):                        # ship the m raw rows centrally
         led_cs.party_to_server("rows", j, m * ds.dims[j])
     theta_cs = ridge_closed_form(XS, yS, lam, w)
     cost_cs = float(ridge_cost(ds.full(), ds.y, theta_cs, lam))
@@ -52,6 +56,20 @@ def main() -> None:
     print(f"C-CENTRAL cost={cost_cs:12.2f}  comm={led_cs.total:>12,} units")
     print(f"cost ratio {cost_cs / cost_full:.4f}  "
           f"comm reduction {led_full.total / led_cs.total:.1f}x")
+
+    # --- batched sweep: 4 seeds x 3 budgets, ONE compiled call -------------
+    budgets = (200, 400, 800)
+    grid = build_coresets_batched("vrlr", ds, budgets,
+                                  key=jax.random.fold_in(key, 4), num_seeds=4)
+    print(f"\nbatched sweep ({grid.num_seeds} seeds x {budgets}):")
+    for mi, mm in enumerate(budgets):
+        ratios = []
+        for r in range(grid.num_seeds):
+            XSb, ySb, wb = grid.coreset(r, mi).materialize(ds)
+            th = ridge_closed_form(XSb, ySb, lam, wb)
+            ratios.append(float(ridge_cost(ds.full(), ds.y, th, lam)) / cost_full)
+        print(f"  m={mm:4d}  cost ratio mean={jnp.mean(jnp.array(ratios)):.4f}  "
+              f"comm={grid.coreset(0, mi).comm_units:>7,} units")
 
 
 if __name__ == "__main__":

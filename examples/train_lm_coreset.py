@@ -41,12 +41,13 @@ def small_llama():
 
 
 def train(mode: str, steps: int, batch: int, seq: int, seed: int = 0,
-          ckpt_dir: str = None):
+          ckpt_dir: str = None, score: str = "leverage"):
     cfg = small_llama()
     key = jax.random.PRNGKey(seed)
     state = train_state_init(key, cfg)
     n_params = param_count(state["params"])
-    sel = SelectorConfig(mode=mode, fraction=0.25) if mode != "none" else None
+    sel = (SelectorConfig(mode=mode, fraction=0.25, score=score)
+           if mode != "none" else None)
     step = jax.jit(make_train_step(cfg, cosine_with_warmup(3e-4, 20, steps), sel))
     stream = iter(TokenStream(vocab=cfg.vocab_size, seq_len=seq,
                               batch_size=batch, seed=seed))
@@ -70,6 +71,8 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--mode", default="coreset", choices=["none", "uniform", "coreset"])
+    ap.add_argument("--score", default="leverage", choices=["leverage", "norm"],
+                    help="coreset score backend (norm = cheap row-norm ablation)")
     ap.add_argument("--compare", action="store_true")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
@@ -78,7 +81,8 @@ def main() -> None:
     results = {}
     for mode in modes:
         losses, n_params = train(mode, args.steps, args.batch, args.seq,
-                                 ckpt_dir=args.ckpt if mode == modes[-1] else None)
+                                 ckpt_dir=args.ckpt if mode == modes[-1] else None,
+                                 score=args.score)
         results[mode] = losses
         print(f"[{mode:8s}] params={n_params/1e6:.1f}M "
               f"final ce={np.mean(losses[-10:]):.4f}")

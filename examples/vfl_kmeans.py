@@ -16,8 +16,7 @@ import jax
 from repro.core import (
     CommLedger,
     VFLDataset,
-    build_uniform_coreset,
-    build_vkmc_coreset,
+    build_coreset,
     distdim,
     kmeans,
     kmeans_cost,
@@ -44,7 +43,8 @@ def main() -> None:
           f"comm={led.total:>12,}")
 
     led = CommLedger()
-    cs = build_vkmc_coreset(jax.random.fold_in(key, 3), ds, k=k, m=m, ledger=led)
+    cs = build_coreset("vkmc", ds, m, key=jax.random.fold_in(key, 3), k=k,
+                       ledger=led)
     XS, _, w = cs.materialize(ds)
     for j in range(T):
         led.party_to_server("rows", j, m * ds.dims[j])
@@ -53,7 +53,8 @@ def main() -> None:
           f"comm={led.total:>12,}   (m={m})")
 
     led = CommLedger()
-    us = build_uniform_coreset(jax.random.fold_in(key, 5), ds, m=m, ledger=led)
+    us = build_coreset("uniform", ds, m, key=jax.random.fold_in(key, 5),
+                       ledger=led)
     XU, _, wu = us.materialize(ds)
     for j in range(T):
         led.party_to_server("rows", j, m * ds.dims[j])

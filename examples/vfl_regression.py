@@ -13,8 +13,7 @@ import jax
 from repro.core import (
     CommLedger,
     VFLDataset,
-    build_uniform_coreset,
-    build_vrlr_coreset,
+    build_coreset,
     central_comm_cost,
     ridge_closed_form,
     ridge_cost,
@@ -43,10 +42,10 @@ def main() -> None:
                        steps=20000, dims=ds.dims, ledger=led)
     report("SAGA", theta, led)
 
-    for name, builder in (("C-CENTRAL", build_vrlr_coreset),
-                          ("U-CENTRAL", build_uniform_coreset)):
+    for name, task in (("C-CENTRAL", "vrlr"), ("U-CENTRAL", "uniform")):
         led = CommLedger()
-        cs = builder(jax.random.fold_in(key, 2), ds, m, ledger=led)
+        cs = build_coreset(task, ds, m, key=jax.random.fold_in(key, 2),
+                           ledger=led)
         XS, yS, w = cs.materialize(ds)
         for j in range(ds.T):
             led.party_to_server("rows", j, m * ds.dims[j])

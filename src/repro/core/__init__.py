@@ -2,29 +2,53 @@
 construction for vertical federated learning.
 
 Public API:
-  VFLDataset, split_columns, standardize          (vfl)
-  CommLedger, theoretical_dis_cost                (comm)
-  dis_sample, uniform_sample, dis_marginals       (dis — Algorithm 1)
-  vrlr_local_scores, vkmc_local_scores, ...       (sensitivity — Alg 2/3 local)
-  build_vrlr_coreset, build_vkmc_coreset, Coreset (coreset — Alg 2/3 e2e)
-  ridge_closed_form, fista, saga_ridge, solve     (vrlr solvers)
-  kmeans, kmeans_plusplus, lloyd, distdim, ...    (vkmc solvers)
-  CoresetBatchSelector                            (selector — LLM integration)
+  build_coreset, build_coresets_batched, CoresetTask,
+  register_task, get_task, CORESET_TASKS, SCORE_BACKENDS  (api — unified pipeline)
+  VFLDataset, split_columns, standardize                  (vfl)
+  CommLedger, CommSchedule, theoretical_dis_cost          (comm)
+  dis_plan, dis_plan_full, server_plan, uniform_plan,
+  dis_sample, uniform_sample, dis_marginals               (dis — Algorithm 1)
+  vrlr_local_scores, vkmc_local_scores, ...               (sensitivity — Alg 2/3 local)
+  Coreset, vrlr_coreset_ratio, vkmc_coreset_ratio         (coreset)
+  ridge_closed_form, fista, saga_ridge, solve             (vrlr solvers)
+  kmeans, kmeans_plusplus, lloyd, distdim, ...            (vkmc solvers)
+  SelectorConfig, make_mesh_selector                      (selector — LLM integration)
+
+Deprecated (seed API, kept as bit-identical shims):
+  build_vrlr_coreset, build_vkmc_coreset, build_uniform_coreset
 """
 
-from repro.core.comm import CommLedger, theoretical_dis_cost
-from repro.core.coreset import (
-    Coreset,
-    build_uniform_coreset,
-    build_vkmc_coreset,
-    build_vrlr_coreset,
-    vkmc_coreset_ratio,
-    vrlr_coreset_ratio,
+import warnings
+from typing import Optional
+
+import jax
+
+from repro.core.api import (
+    CORESET_TASKS,
+    SCORE_BACKENDS,
+    BatchedCoresets,
+    CoresetTask,
+    build_coreset,
+    build_coresets_batched,
+    get_task,
+    register_task,
 )
-from repro.core.dis import dis_marginals, dis_sample, uniform_sample
+from repro.core.comm import CommLedger, CommSchedule, theoretical_dis_cost
+from repro.core.coreset import Coreset, vkmc_coreset_ratio, vrlr_coreset_ratio
+from repro.core.dis import (
+    dis_marginals,
+    dis_plan,
+    dis_plan_full,
+    dis_sample,
+    server_plan,
+    uniform_plan,
+    uniform_sample,
+)
 from repro.core.sensitivity import (
     kmeans_assignment,
     leverage_scores,
+    norm_scores,
+    ridge_leverage_scores,
     total_sensitivity_bound_vkmc,
     total_sensitivity_bound_vrlr,
     vkmc_local_scores,
@@ -44,4 +68,63 @@ from repro.core.vrlr import (
     sq_loss,
 )
 
-__all__ = [n for n in dir() if not n.startswith("_")]
+
+# --------------------------------------------------------------------------
+# Deprecated seed-era builders — thin shims over build_coreset.
+# Same PRNG key => bit-identical (S, w) and identical ledger totals.
+# --------------------------------------------------------------------------
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
+
+
+def build_vrlr_coreset(
+    key: jax.Array,
+    ds: VFLDataset,
+    m: int,
+    ledger: Optional[CommLedger] = None,
+    use_kernel: bool = True,
+) -> Coreset:
+    """Deprecated: use ``build_coreset("vrlr", ds, m, key=key, ...)``."""
+    _deprecated("build_vrlr_coreset", 'build_coreset("vrlr", ...)')
+    return build_coreset("vrlr", ds, m, key=key,
+                         backend="pallas" if use_kernel else "ref",
+                         ledger=ledger)
+
+
+def build_vkmc_coreset(
+    key: jax.Array,
+    ds: VFLDataset,
+    k: int,
+    m: int,
+    alpha: float = 2.0,
+    local_iters: int = 15,
+    ledger: Optional[CommLedger] = None,
+    use_kernel: bool = True,
+) -> Coreset:
+    """Deprecated: use ``build_coreset("vkmc", ds, m, key=key, k=k, ...)``."""
+    _deprecated("build_vkmc_coreset", 'build_coreset("vkmc", ...)')
+    return build_coreset("vkmc", ds, m, key=key,
+                         backend="pallas" if use_kernel else "ref",
+                         ledger=ledger, k=k, alpha=alpha,
+                         local_iters=local_iters)
+
+
+def build_uniform_coreset(
+    key: jax.Array,
+    ds: VFLDataset,
+    m: int,
+    ledger: Optional[CommLedger] = None,
+) -> Coreset:
+    """Deprecated: use ``build_coreset("uniform", ds, m, key=key, ...)``."""
+    _deprecated("build_uniform_coreset", 'build_coreset("uniform", ...)')
+    return build_coreset("uniform", ds, m, key=key, ledger=ledger)
+
+
+import inspect as _inspect
+
+__all__ = [
+    n for n, v in list(globals().items())
+    if not n.startswith("_") and not _inspect.ismodule(v) and n != "Optional"
+]

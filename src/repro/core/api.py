@@ -1,0 +1,341 @@
+"""Unified CoresetPipeline API: one entry point for every coreset task.
+
+The paper's Algorithms 1-3 share a single shape — party-local scores ->
+DIS sampling -> importance weights — which this module makes explicit:
+
+  * :class:`CoresetTask` + :func:`register_task` — a declarative task spec in
+    a string registry (``CORESET_TASKS``, built on ``repro.utils.registry``).
+    Shipped tasks: ``vrlr`` (Algorithm 2), ``vkmc`` (Algorithm 3), ``uniform``
+    (the U-* baseline).  New tasks (e.g. communication-compressed or DP
+    score variants) plug in with one decorator and inherit the DIS core,
+    accounting, and batched construction for free.
+  * ScoreBackend — how party-local scores are computed: ``pallas`` (the
+    Pallas kernels; interpret-mode on CPU), ``ref`` (pure-jnp references,
+    vmap-safe), ``norm`` (row-norm^2 ablation, as in the mesh selector).
+  * :func:`build_coreset` — the single sequential entry point.  Communication
+    is derived *after* sampling from the plan's realised round-2 counts via
+    :class:`repro.core.comm.CommSchedule`; nothing imperative happens in the
+    traced path.
+  * :func:`build_coresets_batched` — seeds x budget-grid construction as ONE
+    jit-compiled ``vmap(vmap(...))`` call over the pure
+    :func:`repro.core.dis.dis_plan_full` core, using the ``m_cap`` prefix
+    convention for the budget grid.
+
+Key-consumption choreography matches the seed builders exactly, so the
+deprecated ``build_vrlr_coreset`` / ``build_vkmc_coreset`` shims in
+:mod:`repro.core` return bit-identical ``(S, w)`` for the same PRNG key.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm import CommLedger, CommSchedule
+from repro.core.coreset import Coreset
+from repro.core.dis import dis_plan_full, uniform_plan
+from repro.core.sensitivity import (
+    norm_scores,
+    vkmc_local_scores,
+    vrlr_local_scores,
+)
+from repro.core.vfl import VFLDataset
+from repro.core.vkmc import kmeans
+from repro.utils.registry import Registry
+
+SCORE_BACKENDS = ("pallas", "ref", "norm")
+
+CORESET_TASKS = Registry("coreset_task")
+
+
+def _key_data(k: jax.Array) -> np.ndarray:
+    """Raw uint32 view of a PRNG key — works for both legacy uint32 keys and
+    new-style typed keys (which np.asarray refuses to convert)."""
+    if jnp.issubdtype(k.dtype, jax.dtypes.prng_key):
+        k = jax.random.key_data(k)
+    return np.asarray(k)
+
+
+def _use_kernel(backend: str) -> bool:
+    if backend not in SCORE_BACKENDS:
+        raise ValueError(
+            f"unknown score backend {backend!r}; expected one of {SCORE_BACKENDS}"
+        )
+    return backend == "pallas"
+
+
+# ScoreFn(key, ds, backend=..., **params) -> (scores (T, n), dis_key).
+# Returning the key for the DIS stage lets tasks that consume PRNG state
+# while scoring (vkmc's local k-means seeding) keep the seed's exact
+# split chain.
+ScoreFn = Callable[..., Tuple[jax.Array, jax.Array]]
+
+
+@dataclasses.dataclass(frozen=True)
+class CoresetTask:
+    """Declarative spec of one coreset-construction task.
+
+    ``score_fn is None`` marks the uniform baseline: no scores travel, the
+    schedule is broadcast-only.  ``deterministic_scores`` asserts the
+    score_fn neither consumes nor transforms the PRNG key (it returns the
+    key it was given, as ``vrlr`` does), letting the batched builder hoist
+    scoring out of the vmapped hot path and share scores across all seeds;
+    the builder verifies the contract and falls back to per-seed scoring if
+    the returned dis_key differs.
+    """
+
+    name: str
+    score_fn: Optional[ScoreFn]
+    needs_labels: bool = False
+    deterministic_scores: bool = True
+    description: str = ""
+
+
+def register_task(name: str, **spec_kwargs):
+    """Decorator: register a score function as task ``name``.
+
+    The decorated callable keeps its identity (so it stays directly
+    importable/testable); the registry stores the wrapping
+    :class:`CoresetTask`.
+    """
+
+    def deco(score_fn: ScoreFn) -> ScoreFn:
+        CORESET_TASKS.register(name)(
+            CoresetTask(name=name, score_fn=score_fn, **spec_kwargs)
+        )
+        return score_fn
+
+    return deco
+
+
+def get_task(task: Union[str, CoresetTask]) -> CoresetTask:
+    if isinstance(task, CoresetTask):
+        return task
+    return CORESET_TASKS.get(task)
+
+
+# --------------------------------------------------------------------------
+# Shipped tasks
+# --------------------------------------------------------------------------
+
+@register_task("vrlr", needs_labels=True,
+               description="Algorithm 2: per-party ridge-leverage scores + DIS")
+def vrlr_scores(key, ds: VFLDataset, backend: str = "pallas"):
+    """Algorithm 2 lines 2-3: g_i^(j) = ||u_i^(j)||^2 + 1/n per party, with
+    party T scoring [X^(T), y].  Deterministic — the key passes through to
+    DIS untouched (the seed's choreography)."""
+    rows = []
+    for j, Xj in enumerate(ds.parts):
+        y = ds.y if j == ds.T - 1 else None            # party T appends labels
+        if backend == "norm":
+            Xa = Xj if y is None else jnp.concatenate([Xj, y[:, None]], axis=1)
+            rows.append(norm_scores(Xa) + 1.0 / ds.n)
+        else:
+            rows.append(vrlr_local_scores(Xj, y, use_kernel=_use_kernel(backend)))
+    return jnp.stack(rows), key
+
+
+@register_task("vkmc", deterministic_scores=False,
+               description="Algorithm 3: local alpha-approx k-means sensitivities + DIS")
+def vkmc_scores(key, ds: VFLDataset, backend: str = "pallas",
+                k: int = 10, alpha: float = 2.0, local_iters: int = 15):
+    """Algorithm 3: party j runs local k-means (alpha-approximate) and scores
+    its block; the key is split once per party and once more for DIS —
+    exactly the seed's chain.
+
+    ``alpha`` is the approximation factor credited to the local solver
+    (k-means++ + Lloyd is O(log k) in theory, ~2 in practice).
+    """
+    rows = []
+    for Xj in ds.parts:
+        key, sub = jax.random.split(key)
+        if backend == "norm":
+            rows.append(norm_scores(Xj) + 1.0 / ds.n)
+        else:
+            local_c = kmeans(sub, Xj, k, iters=local_iters,
+                             use_kernel=_use_kernel(backend))
+            rows.append(vkmc_local_scores(Xj, local_c, alpha,
+                                          use_kernel=_use_kernel(backend)))
+    key, sub = jax.random.split(key)
+    return jnp.stack(rows), sub
+
+
+CORESET_TASKS.register("uniform")(
+    CoresetTask(name="uniform", score_fn=None,
+                description="U-* baseline: uniform indices, weight n/m")
+)
+
+
+# --------------------------------------------------------------------------
+# Sequential entry point
+# --------------------------------------------------------------------------
+
+def build_coreset(
+    task: Union[str, CoresetTask],
+    ds: VFLDataset,
+    budget: int,
+    *,
+    key: jax.Array,
+    backend: str = "pallas",
+    ledger: Optional[CommLedger] = None,
+    **params,
+) -> Coreset:
+    """Build one coreset of ``budget`` rows for ``task`` on ``ds``.
+
+    Task-specific knobs (vkmc's ``k``/``alpha``/``local_iters``) pass through
+    ``**params`` to the task's score function.  The exact per-round
+    communication bill is derived from the realised plan and recorded on
+    ``ledger`` (when given); ``Coreset.comm_units`` is always this
+    construction's own total.
+    """
+    spec = get_task(task)
+    m = int(budget)
+    if spec.needs_labels and ds.y is None:
+        raise ValueError(f"{spec.name} requires labels at party T")
+    if spec.score_fn is None:
+        S, w = uniform_plan(key, ds.n, m)
+        schedule = CommSchedule.uniform(ds.T, m)
+    else:
+        scores, dis_key = spec.score_fn(key, ds, backend=backend, **params)
+        plan = dis_plan_full(dis_key, scores, m)
+        if not bool(plan.totals.sum() > 0):
+            raise ValueError("DIS requires a positive total score")
+        S, w = plan.indices, plan.weights
+        schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
+    schedule.record(ledger)
+    return Coreset(S, w, schedule.total)
+
+
+# --------------------------------------------------------------------------
+# Batched multi-seed / multi-budget construction (one compilation)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchedCoresets:
+    """A (num_seeds, num_budgets) grid of coresets from ONE compiled call.
+
+    ``indices``/``weights`` are ``(R, M, m_cap)`` with the valid-prefix
+    convention: cell (r, i) holds ``ms[i]`` real samples; the padded tail has
+    weight 0.  ``counts`` carries the realised round-2 a_j per cell so the
+    exact CommSchedule can be derived lazily, after the fact — accounting
+    never touched the compiled path.
+    """
+
+    indices: jax.Array            # (R, M, m_cap) int
+    weights: jax.Array            # (R, M, m_cap) float
+    counts: Optional[jax.Array]   # (R, M, T) int; None for the uniform task
+    ms: Tuple[int, ...]
+    T: int
+
+    @property
+    def num_seeds(self) -> int:
+        return int(self.indices.shape[0])
+
+    def schedule(self, seed_idx: int, m_idx: int) -> CommSchedule:
+        m = self.ms[m_idx]
+        if self.counts is None:
+            return CommSchedule.uniform(self.T, m)
+        return CommSchedule.dis(
+            self.T, m, counts=np.asarray(self.counts[seed_idx, m_idx])
+        )
+
+    def coreset(
+        self, seed_idx: int, m_idx: int = 0,
+        ledger: Optional[CommLedger] = None,
+    ) -> Coreset:
+        """Extract cell (seed_idx, m_idx) as a plain :class:`Coreset`."""
+        m = self.ms[m_idx]
+        schedule = self.schedule(seed_idx, m_idx).record(ledger)
+        return Coreset(
+            self.indices[seed_idx, m_idx, :m],
+            self.weights[seed_idx, m_idx, :m],
+            schedule.total,
+        )
+
+
+def build_coresets_batched(
+    task: Union[str, CoresetTask],
+    ds: VFLDataset,
+    ms,
+    *,
+    key: Optional[jax.Array] = None,
+    num_seeds: int = 1,
+    keys: Optional[jax.Array] = None,
+    backend: str = "ref",
+    **params,
+) -> BatchedCoresets:
+    """Construct coresets for every (seed, budget) pair in one compiled call.
+
+    ``ms`` is the budget grid (any iterable of ints); seeds come either from
+    ``keys`` (a stacked ``(R, ...)`` key array) or ``jax.random.split(key,
+    num_seeds)``.  The whole grid is ``jit(vmap(vmap(dis_plan_full)))`` over
+    the pure DIS core: budgets below ``max(ms)`` use the prefix-masking
+    convention (draws are iid, so a prefix of the capacity draw is a valid
+    m-sample), and for ``m == max(ms)`` each cell is exactly the sequential
+    :func:`build_coreset` result for that key.
+
+    ``backend`` defaults to ``"ref"``: the pure-jnp scores trace and vmap
+    cleanly, whereas the Pallas interpret path is not vmap-safe on CPU.
+    """
+    spec = get_task(task)
+    ms = tuple(int(m) for m in ms)
+    if not ms:
+        raise ValueError("empty budget grid")
+    m_cap = max(ms)
+    if keys is None:
+        if key is None:
+            raise ValueError("pass either `key` (+ num_seeds) or `keys`")
+        keys = jax.random.split(key, num_seeds)
+    if spec.needs_labels and ds.y is None:
+        raise ValueError(f"{spec.name} requires labels at party T")
+    ms_arr = jnp.asarray(ms, jnp.int32)
+
+    def _cells(dis_key, sc):
+        """All budget cells for one seed (scores computed once per seed)."""
+        def cell(m):
+            plan = dis_plan_full(dis_key, sc, m, m_cap=m_cap)
+            return plan.indices, plan.weights, plan.counts
+        return jax.vmap(cell)(ms_arr)
+
+    if spec.score_fn is None:
+        def per_seed(k):
+            def cell(m):
+                S, w = uniform_plan(k, ds.n, m, m_cap=m_cap)
+                return S, w, jnp.zeros((ds.T,), jnp.int32)
+            return jax.vmap(cell)(ms_arr)
+    else:
+        hoisted = None
+        if spec.deterministic_scores:
+            # scores are seed-independent: compute once on the host and
+            # share across the whole grid — but only if the score_fn honours
+            # the deterministic contract (key passed through unchanged);
+            # otherwise fall back to per-seed scoring so sequential and
+            # batched builds keep sampling with the same dis_key.
+            sc0, dk0 = spec.score_fn(keys[0], ds, backend=backend, **params)
+            if np.array_equal(_key_data(dk0), _key_data(keys[0])):
+                hoisted = sc0
+        if hoisted is not None:
+            if not bool(hoisted.sum() > 0):
+                raise ValueError("DIS requires a positive total score")
+
+            def per_seed(k):
+                return _cells(k, hoisted)
+        else:
+            def per_seed(k):
+                sc, dis_key = spec.score_fn(k, ds, backend=backend, **params)
+                return _cells(dis_key, sc)
+
+    S, w, counts = jax.jit(jax.vmap(per_seed))(keys)
+    if spec.score_fn is not None and not bool(jnp.all(w[..., 0] > 0)):
+        # w[r, i, 0] = G / (m * g) is positive iff the realised total score
+        # G was — the traced core can't raise, so validate post hoc.
+        raise ValueError("DIS requires a positive total score")
+    return BatchedCoresets(
+        indices=S, weights=w,
+        counts=None if spec.score_fn is None else counts,
+        ms=ms, T=ds.T,
+    )

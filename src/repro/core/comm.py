@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass
@@ -76,6 +76,86 @@ class CommLedger:
         for tag in sorted(self._by_tag):
             lines.append(f"  {tag}: {self._by_tag[tag]}")
         return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommOp:
+    """One planned message: party j's uplink (or downlink when ``down``)."""
+
+    tag: str
+    party: int
+    units: int
+    down: bool = False    # True: server -> party, False: party -> server
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSchedule:
+    """Declarative per-round ledger entries for a protocol execution.
+
+    The jittable protocol cores (:func:`repro.core.dis.dis_plan`) carry no
+    ledger side effects; instead the exact entries are *derived after the
+    fact* from the protocol parameters — ``(T, m)`` plus, for DIS round 2,
+    the realised per-party sample counts ``a_j``.  ``record`` replays the
+    schedule onto a :class:`CommLedger`, producing the same bill the seed's
+    in-line accounting did, without ever entering the traced hot path.
+    """
+
+    ops: Tuple[CommOp, ...]
+
+    @property
+    def total(self) -> int:
+        return sum(op.units for op in self.ops)
+
+    def record(self, ledger: Optional["CommLedger"]) -> "CommSchedule":
+        """Replay onto ``ledger`` (no-op when None); returns self for chaining."""
+        if ledger is not None:
+            for op in self.ops:
+                if op.down:
+                    ledger.server_to_party(op.tag, op.party, op.units)
+                else:
+                    ledger.party_to_server(op.tag, op.party, op.units)
+        return self
+
+    def __add__(self, other: "CommSchedule") -> "CommSchedule":
+        return CommSchedule(self.ops + other.ops)
+
+    @staticmethod
+    def dis(T: int, m: int, counts: Sequence[int]) -> "CommSchedule":
+        """Algorithm 1's three rounds.  ``counts`` is the realised a_j vector
+        (sum = m): round 2's m index uploads are attributed to the party that
+        actually sent them, not lumped onto party 0."""
+        counts = [int(c) for c in counts]
+        if len(counts) != T or sum(counts) != m:
+            raise ValueError(f"bad round-2 counts {counts} for T={T}, m={m}")
+        ops: List[CommOp] = []
+        ops += [CommOp("dis/round1/G_j", j, 1) for j in range(T)]
+        ops += [CommOp("dis/round1/a_j", j, 1, down=True) for j in range(T)]
+        ops += [CommOp("dis/round2/S_up", j, counts[j]) for j in range(T)]
+        ops += [CommOp("dis/round2/S_bcast", j, m, down=True) for j in range(T)]
+        ops += [CommOp("dis/round3/g_scores", j, m) for j in range(T)]
+        return CommSchedule(tuple(ops))
+
+    @staticmethod
+    def uniform(T: int, m: int) -> "CommSchedule":
+        """U-* baseline: the server broadcasts its m uniform indices (mT)."""
+        return CommSchedule(
+            tuple(CommOp("uniform/S_bcast", j, m, down=True) for j in range(T))
+        )
+
+    @staticmethod
+    def materialize(T: int, m: int) -> "CommSchedule":
+        """Theorem 2.5's ``+2mT`` term: when the downstream scheme A runs
+        in-protocol on the coreset, each party receives the m selected
+        indices (m down) and contributes its m per-row scalar shares (m up).
+
+        This is the paper's composition bill.  Shipping the raw feature
+        blocks of the m rows to a central solver instead costs
+        ``sum_j m*d_j`` — the benchmarks account that convention explicitly
+        (their ``materialize/rows`` entries); don't mix the two on one
+        ledger."""
+        ops = [CommOp("materialize/S_down", j, m, down=True) for j in range(T)]
+        ops += [CommOp("materialize/rows_up", j, m) for j in range(T)]
+        return CommSchedule(tuple(ops))
 
 
 def theoretical_dis_cost(m: int, T: int) -> Tuple[int, int]:

@@ -1,25 +1,21 @@
-"""High-level coreset builders: Algorithms 2 and 3 end-to-end.
+"""The :class:`Coreset` container + offline coreset-quality evaluation.
 
-These glue the party-local scores (:mod:`repro.core.sensitivity`) to the DIS
-meta-scheme (:mod:`repro.core.dis`) and return `(S, w)` plus the exact
-communication bill.  When the data assumptions (4.1 / 5.1) fail, the SAME
-code paths return the (beta, eps)-robust coresets of Remarks 4.3 / 5.3 —
-robustness is a property of the guarantee, not of the algorithm.
+The end-to-end builders for Algorithms 2/3 live in :mod:`repro.core.api`
+(``build_coreset`` / ``build_coresets_batched``); the seed-era
+``build_vrlr_coreset`` / ``build_vkmc_coreset`` / ``build_uniform_coreset``
+entry points survive as deprecation shims in :mod:`repro.core`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import sensitivity
-from repro.core.comm import CommLedger, null_ledger
-from repro.core.dis import dis_sample, uniform_sample
+from repro.core.comm import CommLedger, CommSchedule
 from repro.core.vfl import VFLDataset
-from repro.core.vkmc import kmeans
 
 
 @dataclasses.dataclass
@@ -38,68 +34,21 @@ class Coreset:
     def m(self) -> int:
         return int(self.indices.shape[0])
 
-    def materialize(self, ds: VFLDataset) -> Tuple[jax.Array, Optional[jax.Array], jax.Array]:
-        """(X_S, y_S, w) on the server — costs 2mT more units when the
-        downstream solver needs raw rows (Theorem 2.5's `+2mT` term)."""
+    def materialize(
+        self, ds: VFLDataset, ledger: Optional[CommLedger] = None
+    ) -> Tuple[jax.Array, Optional[jax.Array], jax.Array]:
+        """(X_S, y_S, w) on the server.
+
+        Running the downstream scheme on the coreset costs Theorem 2.5's
+        ``+2mT`` extra units (each party: m indices down, m per-row scalar
+        shares up); pass ``ledger`` to record them via
+        ``CommSchedule.materialize``.  Callers that instead ship the raw
+        feature blocks to a central solver should charge ``sum_j m*d_j``
+        explicitly, as the benchmarks do — not both.
+        """
+        CommSchedule.materialize(ds.T, self.m).record(ledger)
         sub = ds.rows(self.indices)
         return sub.full(), sub.y, self.weights
-
-
-def build_vrlr_coreset(
-    key: jax.Array,
-    ds: VFLDataset,
-    m: int,
-    ledger: Optional[CommLedger] = None,
-    use_kernel: bool = True,
-) -> Coreset:
-    """Algorithm 2: per-party ridge-leverage scores + DIS."""
-    led = null_ledger(ledger)
-    if ds.y is None:
-        raise ValueError("VRLR requires labels at party T")
-    scores: List[jax.Array] = []
-    for j, Xj in enumerate(ds.parts):
-        y = ds.y if j == ds.T - 1 else None            # party T appends labels
-        scores.append(sensitivity.vrlr_local_scores(Xj, y, use_kernel=use_kernel))
-    S, w = dis_sample(key, scores, m, led)
-    return Coreset(S, w, led.total)
-
-
-def build_vkmc_coreset(
-    key: jax.Array,
-    ds: VFLDataset,
-    k: int,
-    m: int,
-    alpha: float = 2.0,
-    local_iters: int = 15,
-    ledger: Optional[CommLedger] = None,
-    use_kernel: bool = True,
-) -> Coreset:
-    """Algorithm 3: local alpha-approx k-means -> local sensitivities -> DIS.
-
-    ``alpha`` is the approximation factor credited to the local solver
-    (k-means++ + Lloyd is O(log k) in theory, ~2 in practice).
-    """
-    led = null_ledger(ledger)
-    scores: List[jax.Array] = []
-    for j, Xj in enumerate(ds.parts):
-        key, sub = jax.random.split(key)
-        local_c = kmeans(sub, Xj, k, iters=local_iters, use_kernel=use_kernel)
-        scores.append(sensitivity.vkmc_local_scores(Xj, local_c, alpha, use_kernel=use_kernel))
-    key, sub = jax.random.split(key)
-    S, w = dis_sample(sub, scores, m, led)
-    return Coreset(S, w, led.total)
-
-
-def build_uniform_coreset(
-    key: jax.Array,
-    ds: VFLDataset,
-    m: int,
-    ledger: Optional[CommLedger] = None,
-) -> Coreset:
-    """The U-* baseline: uniform indices, weight n/m."""
-    led = null_ledger(ledger)
-    S, w = uniform_sample(key, ds.n, m, ds.T, led)
-    return Coreset(S, w, led.total)
 
 
 # --------------------------------------------------------------------------

@@ -18,23 +18,187 @@ g_i = sum_j g_i^(j) (proof of Thm 3.1), i.e. DIS *simulates* the
 Feldman-Langberg importance-sampling framework without any party ever
 revealing a raw feature.  Tests verify both the marginal and the ledger
 against ``theoretical_dis_cost``.
+
+Layering (post api_redesign):
+
+  * :func:`dis_plan` / :func:`dis_plan_full` — the PURE protocol core.  The
+    party scores enter stacked as one ``(T, n)`` array, there are no Python
+    party loops and no ledger mutation, so the function jit-compiles and
+    vmaps (over seeds and over a budget grid via the ``m_cap`` masking
+    convention).  Accounting is derived afterwards by
+    :class:`repro.core.comm.CommSchedule` from ``(T, m)`` and the realised
+    round-2 counts ``a_j`` the plan returns.
+  * :func:`server_plan` — the one-round server-side variant used when the
+    combined scores already live on every shard (the mesh selector's psum
+    path: :mod:`repro.core.selector`).
+  * :func:`dis_sample` / :func:`uniform_sample` — back-compat wrappers with
+    the seed API (list-of-scores in, ledger recorded in place); they produce
+    bit-identical ``(S, w)`` for the same PRNG key.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.comm import CommLedger, null_ledger
+from repro.core.comm import CommLedger, CommSchedule
 
 
-def _categorical_counts(key: jax.Array, logits: jax.Array, m: int) -> jax.Array:
-    """m iid categorical draws, returned as per-class counts."""
-    draws = jax.random.categorical(key, logits, shape=(m,))
-    return jnp.bincount(draws, length=logits.shape[0])
+def _float_dtype() -> jnp.dtype:
+    return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
 
+
+def _key_chain(key: jax.Array, num: int) -> jax.Array:
+    """``num`` subkeys from the sequential ``key, sub = split(key)`` chain.
+
+    Matches the seed's per-party key consumption exactly (sub_0 for the
+    round-1 counts, sub_1..sub_T for the party draws) while staying a single
+    scan — no Python loop, traceable, vmap-able.
+    """
+
+    def body(k, _):
+        nxt, sub = jax.random.split(k)
+        return nxt, sub
+
+    _, subs = jax.lax.scan(body, key, None, length=num)
+    return subs
+
+
+class DisPlan(NamedTuple):
+    """The result of one DIS execution, accounting-free.
+
+    With ``m_cap`` masking (``m`` traced < ``m_cap``), ``indices``/``weights``
+    hold the m real samples as a prefix; the padded tail has weight 0 and
+    index 0.
+    """
+
+    indices: jax.Array    # (m_cap,) int   — the sampled multiset S
+    weights: jax.Array    # (m_cap,) float — w(i) = G / (m * g_i)
+    counts: jax.Array     # (T,) int       — realised round-1 a_j (sums to m)
+    totals: jax.Array     # (T,) float     — per-party score mass G^(j)
+
+
+def dis_plan_full(
+    key: jax.Array,
+    scores: jax.Array,
+    m: Union[int, jax.Array],
+    m_cap: Optional[int] = None,
+) -> DisPlan:
+    """Run Algorithm 1 purely: scores ``(T, n)`` in, :class:`DisPlan` out.
+
+    Args:
+      key: PRNG key.
+      scores: stacked party-local scores g^(j), shape (T, n), entries >= 0
+        with a positive total (NOT checked here — the core stays trace-safe;
+        wrappers validate host-side).
+      m: number of samples (with replacement).  May be a traced int32 scalar
+        when ``m_cap`` is given.
+      m_cap: static draw capacity for the masked/batched path.  When None
+        (or equal to a static ``m``) the plan is bit-identical to the seed's
+        ``dis_sample`` for the same key.
+
+    Returns:
+      DisPlan — no ledger is touched; derive the bill afterwards with
+      ``CommSchedule.dis(T, m, counts=plan.counts)``.
+    """
+    T, _ = scores.shape
+    scores = scores.astype(_float_dtype())
+    static_m = m_cap is None or (isinstance(m, int) and int(m) == int(m_cap))
+    cap = int(m) if m_cap is None else int(m_cap)
+    valid = jnp.arange(cap) < m                                # all True if static
+
+    subs = _key_chain(key, T + 1)
+    G_j = jnp.sum(scores, axis=1)                              # (T,)
+    G = G_j.sum()
+
+    # ---- round 1: a ~ Multinomial(m, G_j/G), realised as m iid draws --------
+    draws = jax.random.categorical(
+        subs[0], jnp.log(jnp.maximum(G_j, 1e-30)), shape=(cap,)
+    )
+    a = jnp.zeros((T,), jnp.int32).at[draws].add(valid.astype(jnp.int32))
+
+    # ---- round 2: party-local index sampling, then server union -------------
+    # Party j draws a_j iid indices ~ g_i^(j)/G^(j).  To keep everything
+    # static-shape we draw `cap` candidates per party and select the first
+    # a_j of each via a mask when concatenating — statistically identical
+    # because draws are iid.
+    logits = jnp.log(jnp.maximum(scores, 1e-30))               # (T, n)
+    cand = jax.vmap(
+        lambda k, lg: jax.random.categorical(k, lg, shape=(cap,))
+    )(subs[1:], logits)                                        # (T, cap)
+    take = jnp.arange(cap)[None, :] < a[:, None]               # (T, cap) bool
+    # stable selection of exactly m entries (sum(a) = m by construction)
+    order = jnp.argsort(~take.reshape(-1), stable=True)        # taken slots first
+    S = cand.reshape(-1)[order][:cap]                          # (cap,)
+
+    # ---- round 3: per-sample local scores up, weights at server -------------
+    # Sequential per-party accumulation (scan) keeps the float addition order
+    # identical to the seed's Python loop.
+    def add_party(acc, g_row):
+        return acc + g_row[S], None
+
+    g_sum_S, _ = jax.lax.scan(add_party, jnp.zeros((cap,), scores.dtype), scores)
+    w = G / (m * jnp.maximum(g_sum_S, 1e-30))
+    if not static_m:
+        S = jnp.where(valid, S, 0)
+        w = jnp.where(valid, w, 0.0)
+    return DisPlan(S, w, a, G_j)
+
+
+def dis_plan(
+    key: jax.Array,
+    scores: jax.Array,
+    m: Union[int, jax.Array],
+    m_cap: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Pure DIS core: ``(key, scores (T, n), m) -> (S, w)``.
+
+    jit with ``static_argnums=2`` (or pass a traced ``m`` plus static
+    ``m_cap``), vmap over keys and/or budgets freely.
+    """
+    plan = dis_plan_full(key, scores, m, m_cap=m_cap)
+    return plan.indices, plan.weights
+
+
+def server_plan(
+    key: jax.Array, g: jax.Array, m: int
+) -> Tuple[jax.Array, jax.Array]:
+    """One-round server-side DIS: m categorical draws ~ g/G with importance
+    weights G/(m*g_S).
+
+    This is the degenerate T=1 view of Algorithm 1, used when the combined
+    scores g already live at the sampler — the mesh selector after its psum
+    (rounds 1+3 collapse into the all-reduce, round 2's broadcast into the
+    shared key).
+    """
+    G = jnp.sum(g)
+    S = jax.random.categorical(key, jnp.log(jnp.maximum(g, 1e-30)), shape=(m,))
+    w = G / (m * jnp.maximum(g[S], 1e-30))
+    return S, w
+
+
+def uniform_plan(
+    key: jax.Array,
+    n: int,
+    m: Union[int, jax.Array],
+    m_cap: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Pure uniform baseline: m server-side uniform indices, weight n/m."""
+    static_m = m_cap is None or (isinstance(m, int) and int(m) == int(m_cap))
+    cap = int(m) if m_cap is None else int(m_cap)
+    S = jax.random.randint(key, (cap,), 0, n)
+    if static_m:
+        return S, jnp.full((cap,), n / m)
+    valid = jnp.arange(cap) < m
+    return jnp.where(valid, S, 0), jnp.where(valid, n / m, 0.0)
+
+
+# --------------------------------------------------------------------------
+# Back-compat wrappers (seed API): list-of-scores in, ledger recorded here
+# --------------------------------------------------------------------------
 
 def dis_sample(
     key: jax.Array,
@@ -42,7 +206,7 @@ def dis_sample(
     m: int,
     ledger: Optional[CommLedger] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Run Algorithm 1 (DIS).
+    """Run Algorithm 1 (DIS) — seed-compatible wrapper over :func:`dis_plan`.
 
     Args:
       key: PRNG key.
@@ -54,56 +218,13 @@ def dis_sample(
     Returns:
       (indices, weights): both shape (m,).  ``weights[i] = G/(m * g_{S_i})``.
     """
-    led = null_ledger(ledger)
     T = len(local_scores)
-    n = int(local_scores[0].shape[0])
-    scores = [jnp.asarray(g, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
-              for g in local_scores]
-
-    # ---- round 1: local totals up, per-party sample counts down -------------
-    G_j = jnp.stack([g.sum() for g in scores])                # (T,)
-    for j in range(T):
-        led.party_to_server("dis/round1/G_j", j, 1)
-    G = G_j.sum()
-    if not bool(G > 0):
+    scores = jnp.stack([jnp.asarray(g) for g in local_scores])
+    plan = dis_plan_full(key, scores, int(m))
+    if not bool(plan.totals.sum() > 0):
         raise ValueError("DIS requires a positive total score")
-    key, sub = jax.random.split(key)
-    a = _categorical_counts(sub, jnp.log(jnp.maximum(G_j, 1e-30)), m)  # (T,)
-    for j in range(T):
-        led.server_to_party("dis/round1/a_j", j, 1)
-
-    # ---- round 2: party-local index sampling, then server union -------------
-    # Party j draws a_j iid indices ~ g_i^(j)/G^(j).  To keep everything
-    # static-shape/jit-friendly we draw m candidates per party and select the
-    # first a_j of each via a mask when concatenating — statistically
-    # identical because draws are iid.
-    per_party_idx = []
-    for j in range(T):
-        key, sub = jax.random.split(key)
-        logits = jnp.log(jnp.maximum(scores[j], 1e-30))
-        per_party_idx.append(jax.random.categorical(sub, logits, shape=(m,)))
-    cand = jnp.stack(per_party_idx)                            # (T, m)
-    # position p of the flat sample belongs to the party owning that slot:
-    owner = jnp.repeat(jnp.arange(T), m).reshape(T, m)
-    # build the multiset S by taking a_j entries from party j
-    slot = jnp.arange(m)
-    take = slot[None, :] < a[:, None]                          # (T, m) bool
-    flat_idx = cand.reshape(-1)
-    flat_take = take.reshape(-1)
-    # stable selection of exactly m entries (sum(a)=m by construction)
-    order = jnp.argsort(~flat_take, stable=True)               # taken slots first
-    S = flat_idx[order][:m]                                    # (m,)
-    # parties collectively send exactly m indices up (sum_j a_j = m)
-    led.party_to_server("dis/round2/S_up", 0, m)
-    led.broadcast("dis/round2/S_bcast", T, m)                  # S to every party
-
-    # ---- round 3: per-sample local scores up, weights at server ------------
-    g_sum_S = jnp.zeros((m,), scores[0].dtype)
-    for j in range(T):
-        g_sum_S = g_sum_S + scores[j][S]
-        led.party_to_server("dis/round3/g_scores", j, m)
-    w = G / (m * jnp.maximum(g_sum_S, 1e-30))
-    return S, w
+    CommSchedule.dis(T, int(m), counts=np.asarray(plan.counts)).record(ledger)
+    return plan.indices, plan.weights
 
 
 def dis_marginals(local_scores: List[jax.Array]) -> jax.Array:
@@ -118,8 +239,6 @@ def uniform_sample(
     """Uniform-sampling baseline (the paper's U-*): the server draws m indices
     itself and broadcasts them; weight n/m each.  Cost: mT (broadcast only —
     no scores ever travel, which is why U-* is slightly cheaper)."""
-    led = null_ledger(ledger)
-    S = jax.random.randint(key, (m,), 0, n)
-    led.broadcast("uniform/S_bcast", T, m)
-    w = jnp.full((m,), n / m)
+    S, w = uniform_plan(key, n, int(m))
+    CommSchedule.uniform(T, int(m)).record(ledger)
     return S, w

@@ -30,6 +30,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.dis import server_plan, uniform_plan
+from repro.core.sensitivity import norm_scores, ridge_leverage_scores
+
 
 @dataclasses.dataclass(frozen=True)
 class SelectorConfig:
@@ -47,27 +50,25 @@ def local_scores(feats_local: jax.Array, score: str, ridge: float) -> jax.Array:
 
     ``leverage``: Algorithm 2's g_i^(j) (ridge leverage + 1/B floor).
     ``norm``: plain row-norm^2 — the cheap ablation.
+
+    Both delegate to the shared score primitives in
+    :mod:`repro.core.sensitivity` (the same ones the ``repro.core.api``
+    ScoreBackends use).
     """
-    B, dl = feats_local.shape
-    f32 = feats_local.astype(jnp.float32)
+    B = feats_local.shape[0]
     if score == "norm":
-        return jnp.sum(f32 * f32, axis=-1) + 1.0 / B
-    G = f32.T @ f32 + ridge * jnp.eye(dl, dtype=jnp.float32)
-    M = jnp.linalg.inv(G)
-    lev = jnp.clip(jnp.einsum("nd,de,ne->n", f32, M, f32), 0.0, 1.0)
-    return lev + 1.0 / B
+        return norm_scores(feats_local) + 1.0 / B
+    return ridge_leverage_scores(feats_local, ridge) + 1.0 / B
 
 
 def sample_coreset(
     key: jax.Array, g: jax.Array, m: int
 ) -> Tuple[jax.Array, jax.Array]:
     """m categorical draws ~ g/G with importance weights G/(m*g_S) — the
-    server side of DIS.  `g` must be identical on all shards (post-psum),
-    and `key` shared, so this is replicated compute with no communication."""
-    G = jnp.sum(g)
-    S = jax.random.categorical(key, jnp.log(jnp.maximum(g, 1e-30)), shape=(m,))
-    w = G / (m * jnp.maximum(g[S], 1e-30))
-    return S, w
+    server side of DIS (:func:`repro.core.dis.server_plan`).  `g` must be
+    identical on all shards (post-psum), and `key` shared, so this is
+    replicated compute with no communication."""
+    return server_plan(key, g, m)
 
 
 def select(
@@ -85,8 +86,7 @@ def select(
     B = feats.shape[0]
     m = cfg.m_of(B)
     if cfg.mode == "uniform":
-        S = jax.random.randint(key, (m,), 0, B)
-        return S, jnp.full((m,), B / m, jnp.float32)
+        return uniform_plan(key, B, m)
     if cfg.mode != "coreset":
         raise ValueError(f"select() called with mode={cfg.mode!r}")
     g = local_scores(feats, cfg.score, cfg.ridge)

@@ -43,6 +43,33 @@ def leverage_scores(Xj: jax.Array, rcond: float = 1e-6, use_kernel: bool = True)
     return jnp.clip(lev, 0.0, 1.0)
 
 
+def ridge_leverage_scores(
+    X: jax.Array, ridge: float = 1e-4, use_kernel: bool = False
+) -> jax.Array:
+    """Regularised leverage x_i^T (X^T X + ridge*I)^{-1} x_i, clipped to [0,1].
+
+    The well-conditioned variant used on mesh feature slices (the selector's
+    per-shard scores); :func:`leverage_scores` is the exact pseudo-inverse
+    form for the paper-fidelity path.
+    """
+    f32 = X.astype(jnp.float32)
+    dl = f32.shape[-1]
+    G = f32.T @ f32 + ridge * jnp.eye(dl, dtype=jnp.float32)
+    M = jnp.linalg.inv(G)
+    if use_kernel:
+        lev = kops.leverage(f32, M)
+    else:
+        lev = jnp.einsum("nd,de,ne->n", f32, M, f32)
+    return jnp.clip(lev, 0.0, 1.0)
+
+
+def norm_scores(X: jax.Array) -> jax.Array:
+    """Plain row-norm^2 — the cheap ablation backend shared by the selector
+    and the ``norm`` ScoreBackend of :mod:`repro.core.api`."""
+    f32 = X.astype(jnp.float32)
+    return jnp.sum(f32 * f32, axis=-1)
+
+
 def vrlr_local_scores(
     Xj: jax.Array, y: Optional[jax.Array] = None, use_kernel: bool = True
 ) -> jax.Array:

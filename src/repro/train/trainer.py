@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.dis import uniform_plan
 from repro.core.selector import SelectorConfig, local_scores, sample_coreset
 from repro.models import api as model_api
 from repro.models.layers import embed
@@ -66,10 +67,8 @@ def make_train_step(
         weights = None
         if sel.mode == "uniform":
             B = batch["tokens"].shape[0]
-            m = sel.m_of(B)
-            idx = jax.random.randint(key, (m,), 0, B)
+            idx, weights = uniform_plan(key, B, sel.m_of(B))
             batch = _select_rows(batch, idx)
-            weights = jnp.full((m,), B / m, jnp.float32)
         elif sel.mode == "coreset":
             feats = _score_features(params, cfg, batch)
             g = local_scores(feats, sel.score, sel.ridge)

@@ -1,5 +1,9 @@
 """Hypothesis property tests on the system's invariants."""
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -38,7 +38,51 @@ from repro.data.synthetic import kc_house_like, year_prediction_like
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 
+# Machine-readable kernel-perf trajectory, tracked from PR 2 onward.  Lives
+# at the repo root (next to the CSV artifacts dir) so CI uploads it and
+# successive PRs can diff the entries.
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                          "BENCH_kernels.json")
+
 SIZES = [1000, 2000, 3000, 4000, 5000, 6000]
+
+
+def write_bench_json(section: str, entries: List[Dict]) -> None:
+    """Merge ``entries`` under ``section`` into BENCH_kernels.json.
+
+    Sections are replaced wholesale per run (each benchmark module owns one
+    section); other sections are preserved so kernel_micro and fused_lloyd
+    can update the same artifact independently.
+    """
+    import json
+
+    doc = {"schema": 1, "backend": jax.default_backend(), "sections": {}}
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                doc = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            pass
+    doc.setdefault("sections", {})
+    doc["schema"] = 1
+    doc["backend"] = jax.default_backend()
+    doc["sections"][section] = entries
+    with open(BENCH_JSON, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def time_us(fn: Callable, *args, iters: int = 5) -> float:
+    """Mean wall microseconds per call: one blocked warmup (compile/trace),
+    then ``iters`` timed calls blocked at the end.  Shared by the kernel
+    microbenchmarks so their numbers stay comparable."""
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    out = None
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
 
 
 def write_rows(bench: str, rows: List[Dict]) -> None:

@@ -4,7 +4,7 @@ only; the BlockSpec analysis in EXPERIMENTS.md covers the TPU target)."""
 
 from __future__ import annotations
 
-import time
+import argparse
 
 import functools
 
@@ -12,22 +12,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import kmeans_assign as _ka
+from repro.kernels import kmeans_assign_update as _kau
 from repro.kernels import leverage as _lev
 from repro.kernels import ref
 from repro.kernels import weighted_gram as _wg
-from benchmarks.common import write_rows
+from benchmarks.common import time_us, write_bench_json, write_rows
 
 BENCH = "kernel_micro"
-
-
-def _time(fn, *args, iters=5):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.time()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / iters * 1e6
 
 
 def run(fast: bool = True):
@@ -39,31 +30,42 @@ def run(fast: bool = True):
     w = jax.random.uniform(jax.random.fold_in(key, 2), (n,))
 
     jit_ref_ka = jax.jit(ref.kmeans_assign)
+    jit_ref_kau = jax.jit(ref.kmeans_assign_update)
     jit_ref_lev = jax.jit(ref.leverage)
     jit_ref_wg = jax.jit(ref.weighted_gram)
 
     interp = jax.default_backend() != "tpu"
     pl_ka = functools.partial(_ka.kmeans_assign, interpret=interp)
+    pl_kau = functools.partial(_kau.kmeans_assign_update, interpret=interp)
     pl_lev = functools.partial(_lev.leverage, interpret=interp)
     pl_wg = functools.partial(_wg.weighted_gram, interpret=interp)
     suffix = "pallas-interp" if interp else "pallas"
-    rows = []
+    rows, json_entries = [], []
     for name, fn, args in [
         (f"kmeans_assign/{suffix}", pl_ka, (X, C)),
         ("kmeans_assign/jnp-ref", jit_ref_ka, (X, C)),
+        (f"kmeans_assign_update/{suffix}", pl_kau, (X, C, w)),
+        ("kmeans_assign_update/jnp-ref", jit_ref_kau, (X, C, w)),
         (f"leverage/{suffix}", pl_lev, (X, M)),
         ("leverage/jnp-ref", jit_ref_lev, (X, M)),
         (f"weighted_gram/{suffix}", pl_wg, (X, w)),
         ("weighted_gram/jnp-ref", jit_ref_wg, (X, w)),
     ]:
-        us = _time(fn, *args)
+        us = time_us(fn, *args)
         rows.append({"bench": BENCH, "method": name, "size": n,
                      "cost_mean": round(us, 1), "cost_std": 0.0,
                      "comm": 0, "wall_s": round(us / 1e6, 4)})
+        json_entries.append({"method": name, "n": n,
+                             "us_per_call": round(us, 1)})
     write_rows(BENCH, rows)
+    write_bench_json(BENCH, json_entries)
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true", default=True)
+    ap.add_argument("--full", dest="fast", action="store_false")
+    args = ap.parse_args()
+    for r in run(fast=args.fast):
         print(r)

@@ -32,6 +32,7 @@ MODULES = [
     "centers",          # Fig 9 (k=5)
     "second_dataset",   # Fig 10/11 (KC-House profile)
     "kernel_micro",     # Pallas kernel us/call
+    "fused_lloyd",      # fused vs seed Lloyd step: passes-over-X + us/step
     "selector_step",    # beyond-paper: LLM coreset batch selection
     "assumption_sweep",  # beyond-paper: Assumption 4.1/5.1 violation sweep
 ]
@@ -57,8 +58,9 @@ def main() -> int:
                 derived = f"cost={r['cost_mean']:.4g} comm={r['comm']}"
                 print(f"{label},{us:.0f},{derived}")
         except Exception as e:  # keep the suite going; report at the end
+            # failures go to stderr ONLY — stdout stays parseable CSV
             failures += 1
-            print(f"{name},0,ERROR:{type(e).__name__}:{e}", file=sys.stdout)
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", file=sys.stderr)
             import traceback
             traceback.print_exc(file=sys.stderr)
         print(f"# {name} finished in {time.time()-t0:.1f}s", file=sys.stderr)

@@ -2,7 +2,7 @@
 construction for vertical federated learning.
 
 Public API:
-  build_coreset, build_coresets_batched, CoresetTask,
+  build_coreset, build_coreset_jit, build_coresets_batched, CoresetTask,
   register_task, get_task, CORESET_TASKS, SCORE_BACKENDS  (api — unified pipeline)
   VFLDataset, split_columns, standardize                  (vfl)
   CommLedger, CommSchedule, theoretical_dis_cost          (comm)
@@ -29,6 +29,7 @@ from repro.core.api import (
     BatchedCoresets,
     CoresetTask,
     build_coreset,
+    build_coreset_jit,
     build_coresets_batched,
     get_task,
     register_task,

@@ -16,6 +16,9 @@ DIS sampling -> importance weights — which this module makes explicit:
     is derived *after* sampling from the plan's realised round-2 counts via
     :class:`repro.core.comm.CommSchedule`; nothing imperative happens in the
     traced path.
+  * :func:`build_coreset_jit` — the one-dispatch fast path: scoring (stacked
+    party axis, fused kernels) + DIS compiled into ONE jitted function per
+    ``(task, shapes, backend, params)`` cache key.
   * :func:`build_coresets_batched` — seeds x budget-grid construction as ONE
     jit-compiled ``vmap(vmap(...))`` call over the pure
     :func:`repro.core.dis.dis_plan_full` core, using the ``m_cap`` prefix
@@ -37,11 +40,11 @@ import numpy as np
 
 from repro.core.comm import CommLedger, CommSchedule
 from repro.core.coreset import Coreset
-from repro.core.dis import dis_plan_full, uniform_plan
+from repro.core.dis import _float_dtype, dis_plan_full, uniform_plan
 from repro.core.sensitivity import (
     norm_scores,
     vkmc_local_scores,
-    vrlr_local_scores,
+    vrlr_scores_stacked,
 )
 from repro.core.vfl import VFLDataset
 from repro.core.vkmc import kmeans
@@ -127,16 +130,16 @@ def get_task(task: Union[str, CoresetTask]) -> CoresetTask:
 def vrlr_scores(key, ds: VFLDataset, backend: str = "pallas"):
     """Algorithm 2 lines 2-3: g_i^(j) = ||u_i^(j)||^2 + 1/n per party, with
     party T scoring [X^(T), y].  Deterministic — the key passes through to
-    DIS untouched (the seed's choreography)."""
-    rows = []
-    for j, Xj in enumerate(ds.parts):
-        y = ds.y if j == ds.T - 1 else None            # party T appends labels
-        if backend == "norm":
-            Xa = Xj if y is None else jnp.concatenate([Xj, y[:, None]], axis=1)
-            rows.append(norm_scores(Xa) + 1.0 / ds.n)
-        else:
-            rows.append(vrlr_local_scores(Xj, y, use_kernel=_use_kernel(backend)))
-    return jnp.stack(rows), key
+    DIS untouched (the seed's choreography).
+
+    All T parties are scored by ONE dispatch over the padded stacked view
+    ((T, n, s) blocks, labels pre-appended): batched Gram + eigh, then a
+    single party-batched ``leverage`` kernel call — no Python party loop.
+    """
+    st = ds.stacked(with_labels=True)
+    if backend == "norm":
+        return norm_scores(st.blocks) + 1.0 / ds.n, key
+    return vrlr_scores_stacked(st.blocks, use_kernel=_use_kernel(backend)), key
 
 
 @register_task("vkmc", deterministic_scores=False,
@@ -145,23 +148,31 @@ def vkmc_scores(key, ds: VFLDataset, backend: str = "pallas",
                 k: int = 10, alpha: float = 2.0, local_iters: int = 15):
     """Algorithm 3: party j runs local k-means (alpha-approximate) and scores
     its block; the key is split once per party and once more for DIS —
-    exactly the seed's chain.
+    exactly the seed's chain (subkeys are pre-split host-side, then the
+    compute runs as ONE vmap over the party axis of the stacked view).
 
-    ``alpha`` is the approximation factor credited to the local solver
-    (k-means++ + Lloyd is O(log k) in theory, ~2 in practice).
+    Zero column padding is distance-transparent (every point shares the
+    same zeros), so local k-means and sensitivities on the padded blocks
+    equal their per-party values.  ``alpha`` is the approximation factor
+    credited to the local solver (k-means++ + Lloyd is O(log k) in theory,
+    ~2 in practice).
     """
-    rows = []
-    for Xj in ds.parts:
+    subs = []
+    for _ in range(ds.T):                     # the seed's per-party key chain
         key, sub = jax.random.split(key)
-        if backend == "norm":
-            rows.append(norm_scores(Xj) + 1.0 / ds.n)
-        else:
-            local_c = kmeans(sub, Xj, k, iters=local_iters,
-                             use_kernel=_use_kernel(backend))
-            rows.append(vkmc_local_scores(Xj, local_c, alpha,
-                                          use_kernel=_use_kernel(backend)))
-    key, sub = jax.random.split(key)
-    return jnp.stack(rows), sub
+        subs.append(sub)
+    key, dis_key = jax.random.split(key)
+    st = ds.stacked()
+    if backend == "norm":
+        return norm_scores(st.blocks) + 1.0 / ds.n, dis_key
+
+    use_kernel = _use_kernel(backend)
+
+    def party(sub, Xb):
+        local_c = kmeans(sub, Xb, k, iters=local_iters, use_kernel=use_kernel)
+        return vkmc_local_scores(Xb, local_c, alpha, use_kernel=use_kernel)
+
+    return jax.vmap(party)(jnp.stack(subs), st.blocks), dis_key
 
 
 CORESET_TASKS.register("uniform")(
@@ -208,6 +219,75 @@ def build_coreset(
         schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
     schedule.record(ledger)
     return Coreset(S, w, schedule.total)
+
+
+# --------------------------------------------------------------------------
+# Fused scoring+DIS fast path: ONE compiled dispatch per construction
+# --------------------------------------------------------------------------
+
+# (task spec, dims, labeled?, n, m, backend, params) -> jitted builder.
+_JIT_BUILDERS: dict = {}
+
+
+def build_coreset_jit(
+    task: Union[str, CoresetTask],
+    ds: VFLDataset,
+    budget: int,
+    *,
+    key: jax.Array,
+    backend: str = "pallas",
+    ledger: Optional[CommLedger] = None,
+    **params,
+) -> Coreset:
+    """One-dispatch :func:`build_coreset`: scoring + :func:`dis_plan_full`
+    fused into a single jitted function, cached per ``(task, shapes,
+    backend, params)``.
+
+    The sequential :func:`build_coreset` stays the fidelity reference — it
+    runs scoring eagerly and is the bit-identity anchor against the seed;
+    this fast path traces the exact same score function and DIS core into
+    one XLA program (a T-party build is ONE launch instead of T+1) and
+    amortises compilation across repeated builds of the same geometry.
+    Whole-program fusion may reorder fp reductions vs the eager reference,
+    so weights agree to fp tolerance (not bitwise) and a draw landing
+    exactly on a categorical boundary could in principle differ — use the
+    sequential path where cross-version draw stability matters.
+    """
+    spec = get_task(task)
+    m = int(budget)
+    if spec.needs_labels and ds.y is None:
+        raise ValueError(f"{spec.name} requires labels at party T")
+    _use_kernel(backend)  # validate the backend name up front
+
+    if spec.score_fn is None:
+        cache_key = (spec, ds.n, m)
+        fn = _JIT_BUILDERS.get(cache_key)
+        if fn is None:
+            n = ds.n   # bind the scalars only — the cached closure must not
+            fn = jax.jit(lambda k: uniform_plan(k, n, m))  # pin ds's arrays
+            _JIT_BUILDERS[cache_key] = fn
+        S, w = fn(key)
+        schedule = CommSchedule.uniform(ds.T, m)
+        schedule.record(ledger)
+        return Coreset(S, w, schedule.total)
+
+    cache_key = (spec, ds.dims, ds.y is not None, ds.n, m, backend,
+                 tuple(sorted(params.items())))
+    fn = _JIT_BUILDERS.get(cache_key)
+    if fn is None:
+        def _build(k, parts, y):
+            ds_t = VFLDataset(list(parts), y)
+            scores, dis_key = spec.score_fn(k, ds_t, backend=backend, **params)
+            return dis_plan_full(dis_key, scores, m)
+
+        fn = jax.jit(_build)
+        _JIT_BUILDERS[cache_key] = fn
+    plan = fn(key, tuple(ds.parts), ds.y)
+    if not bool(plan.totals.sum() > 0):
+        raise ValueError("DIS requires a positive total score")
+    schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
+    schedule.record(ledger)
+    return Coreset(plan.indices, plan.weights, schedule.total)
 
 
 # --------------------------------------------------------------------------
@@ -278,8 +358,10 @@ def build_coresets_batched(
     m-sample), and for ``m == max(ms)`` each cell is exactly the sequential
     :func:`build_coreset` result for that key.
 
-    ``backend`` defaults to ``"ref"``: the pure-jnp scores trace and vmap
-    cleanly, whereas the Pallas interpret path is not vmap-safe on CPU.
+    ``backend`` defaults to ``"ref"`` (the pure-jnp scores are cheapest on
+    a CPU container); ``"pallas"`` also vmaps — the kernels fold the seed
+    batch into their grid via the native pallas batching rule, so the whole
+    grid is still one dispatch (interpret-mode on CPU, compiled on TPU).
     """
     spec = get_task(task)
     ms = tuple(int(m) for m in ms)
@@ -294,10 +376,10 @@ def build_coresets_batched(
         raise ValueError(f"{spec.name} requires labels at party T")
     ms_arr = jnp.asarray(ms, jnp.int32)
 
-    def _cells(dis_key, sc):
+    def _cells(dis_key, sc, totals=None):
         """All budget cells for one seed (scores computed once per seed)."""
         def cell(m):
-            plan = dis_plan_full(dis_key, sc, m, m_cap=m_cap)
+            plan = dis_plan_full(dis_key, sc, m, m_cap=m_cap, totals=totals)
             return plan.indices, plan.weights, plan.counts
         return jax.vmap(cell)(ms_arr)
 
@@ -321,9 +403,12 @@ def build_coresets_batched(
         if hoisted is not None:
             if not bool(hoisted.sum() > 0):
                 raise ValueError("DIS requires a positive total score")
+            # eager per-party totals: same reduction kernel as the sequential
+            # path, so w = G/(m g) matches sequential builds bit for bit.
+            hoisted_totals = jnp.sum(hoisted.astype(_float_dtype()), axis=1)
 
             def per_seed(k):
-                return _cells(k, hoisted)
+                return _cells(k, hoisted, totals=hoisted_totals)
         else:
             def per_seed(k):
                 sc, dis_key = spec.score_fn(k, ds, backend=backend, **params)

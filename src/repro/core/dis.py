@@ -86,6 +86,7 @@ def dis_plan_full(
     scores: jax.Array,
     m: Union[int, jax.Array],
     m_cap: Optional[int] = None,
+    totals: Optional[jax.Array] = None,
 ) -> DisPlan:
     """Run Algorithm 1 purely: scores ``(T, n)`` in, :class:`DisPlan` out.
 
@@ -99,6 +100,13 @@ def dis_plan_full(
       m_cap: static draw capacity for the masked/batched path.  When None
         (or equal to a static ``m``) the plan is bit-identical to the seed's
         ``dis_sample`` for the same key.
+      totals: optional precomputed per-party mass ``sum_i g_i^(j)`` (T,).
+        The batched builder passes the eagerly-reduced totals of hoisted
+        scores here: XLA lowers the (T, n) -> (T,) reduction with a
+        different accumulation order inside a vmapped program than in the
+        standalone eager kernel, and since every weight carries G = sum_j
+        G^(j), reusing the eager reduction keeps batched cells bit-identical
+        to sequential builds.
 
     Returns:
       DisPlan — no ledger is touched; derive the bill afterwards with
@@ -111,7 +119,8 @@ def dis_plan_full(
     valid = jnp.arange(cap) < m                                # all True if static
 
     subs = _key_chain(key, T + 1)
-    G_j = jnp.sum(scores, axis=1)                              # (T,)
+    G_j = (jnp.sum(scores, axis=1) if totals is None
+           else totals.astype(_float_dtype()))                 # (T,)
     G = G_j.sum()
 
     # ---- round 1: a ~ Multinomial(m, G_j/G), realised as m iid draws --------

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 
 # --------------------------------------------------------------------------
@@ -83,6 +84,35 @@ def vrlr_local_scores(
     return leverage_scores(Xj, use_kernel=use_kernel) + 1.0 / n
 
 
+def vrlr_scores_stacked(
+    blocks: jax.Array, rcond: float = 1e-6, use_kernel: bool = True
+) -> jax.Array:
+    """Algorithm 2 lines 2-3 for ALL parties in one dispatch.
+
+    ``blocks`` is the (T, n, s) zero-padded stack from
+    :meth:`repro.core.vfl.VFLDataset.stacked` (labels already appended to
+    party T's block).  Zero padding is transparent: the padded Gram gains
+    zero rows/columns whose eigenvalues fall below the rcond cutoff, so the
+    batched eigen-pseudo-inverse equals the per-party one embedded, and the
+    rows' quadratic forms are untouched (x is 0 on padded coordinates).
+    Returns (T, n) scores.  The O(T n s^2) row sweep is ONE batched
+    ``leverage`` kernel call (party axis folded into the grid).
+    """
+    f = blocks.astype(jnp.float32)
+    T, n, s = f.shape
+    G = jnp.einsum("tns,tnu->tsu", f, f)                   # (T, s, s)
+    evals, evecs = jnp.linalg.eigh(G)
+    cutoff = rcond * jnp.maximum(evals.max(axis=1), 0.0)   # (T,)
+    inv = jnp.where(evals > cutoff[:, None],
+                    1.0 / jnp.maximum(evals, 1e-30), 0.0)
+    M = jnp.einsum("tsu,tu,tru->tsr", evecs, inv, evecs)   # batched pinv(Gram)
+    if use_kernel:
+        lev = kops.leverage(f, M)                          # (T, n), one dispatch
+    else:
+        lev = jnp.einsum("tns,tsr,tnr->tn", f, M, f)
+    return jnp.clip(lev, 0.0, 1.0) + 1.0 / n
+
+
 # --------------------------------------------------------------------------
 # Algorithm 3: VKMC local sensitivities
 # --------------------------------------------------------------------------
@@ -103,6 +133,24 @@ def kmeans_assignment(
     return jnp.argmin(d2, axis=1), jnp.min(d2, axis=1)
 
 
+def kmeans_update(
+    Xj: jax.Array,
+    centers: jax.Array,
+    w: Optional[jax.Array] = None,
+    use_kernel: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One fused Lloyd read: (assign, d2, csum, wsum, ccost).
+
+    ``use_kernel=True`` is the single-pass Pallas ``kmeans_assign_update``
+    kernel (one HBM read of X per Lloyd iteration, no segment_sum);
+    ``use_kernel=False`` is the pure-jnp assignment + segment-sum
+    composition — the seed's 3-pass data flow, kept as the semantic oracle.
+    """
+    if use_kernel:
+        return kops.kmeans_assign_update(Xj, centers, w)
+    return kref.kmeans_assign_update(Xj, centers, w)
+
+
 def vkmc_local_scores(
     Xj: jax.Array,
     centers: jax.Array,
@@ -114,13 +162,14 @@ def vkmc_local_scores(
     g_i^(j) = alpha*d(x_i, c_pi(i))^2 / cost
             + alpha * (sum_{i' in B_pi(i)} d(x_i', c_pi(i'))^2) / (|B_pi(i)| * cost)
             + 2*alpha / |B_pi(i)|
+
+    ``cluster_cost``/``cluster_size`` fall out of the same fused pass that
+    computes the assignment (unit weights: wsum = |B_l|, ccost = cost_l) —
+    the scoring pass reads X exactly once.
     """
-    n = Xj.shape[0]
-    k = centers.shape[0]
-    assign, d2 = kmeans_assignment(Xj, centers, use_kernel=use_kernel)
+    assign, d2, _, cluster_size, cluster_cost = kmeans_update(
+        Xj, centers, use_kernel=use_kernel)
     cost = jnp.maximum(d2.sum(), 1e-30)
-    cluster_cost = jax.ops.segment_sum(d2, assign, num_segments=k)       # (k,)
-    cluster_size = jax.ops.segment_sum(jnp.ones((n,)), assign, num_segments=k)
     cluster_size = jnp.maximum(cluster_size, 1.0)
     term1 = alpha * d2 / cost
     term2 = alpha * cluster_cost[assign] / (cluster_size[assign] * cost)

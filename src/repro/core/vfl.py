@@ -10,10 +10,34 @@ geometry (model axis = party axis) lives in :mod:`repro.core.selector`.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+
+
+class StackedParts(NamedTuple):
+    """Padded party-major view of a :class:`VFLDataset`.
+
+    ``blocks`` is (T, n, s) with party j's block left-aligned and
+    zero-padded to the common width s = max_j d_j (+1 when labels are
+    stacked in); ``mask`` is (T, s) bool marking the valid columns.  Zero
+    padding is score-transparent: distances, Grams, row norms and
+    quadratic forms over the padded axis all equal their unpadded values,
+    so one vmap over axis 0 scores every party in a single dispatch.
+    """
+
+    blocks: jnp.ndarray            # (T, n, s) float
+    mask: jnp.ndarray              # (T, s) bool
+    dims: Tuple[int, ...]          # valid width per party (incl. label col)
+
+    @property
+    def T(self) -> int:
+        return int(self.blocks.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.blocks.shape[1])
 
 
 def split_columns(d: int, T: int, sizes: Optional[Sequence[int]] = None) -> List[slice]:
@@ -65,6 +89,34 @@ class VFLDataset:
         """Server-side concatenation — ONLY for evaluation/tests, never used
         inside communication-accounted protocols."""
         return jnp.concatenate(self.parts, axis=1)
+
+    def stacked(self, with_labels: bool = False) -> StackedParts:
+        """Padded (T, n, s) stacking of the party blocks for single-dispatch
+        scoring (one vmap over the party axis instead of a Python loop).
+
+        With ``with_labels=True`` party T's labels are appended as one extra
+        column of its block (the [X^(T), y] basis of Algorithm 2); the
+        common width s grows accordingly.  Each party only ever touches its
+        own slice, so the view is a layout change, not a protocol change.
+        """
+        if with_labels and self.y is None:
+            raise ValueError("with_labels requires labels at party T")
+        widths = list(self.dims)
+        if with_labels:
+            widths[-1] += 1
+        s = max(widths)
+        blocks, mask = [], []
+        for j, p in enumerate(self.parts):
+            b = p
+            if with_labels and j == self.T - 1:
+                b = jnp.concatenate([b, self.y[:, None].astype(b.dtype)], axis=1)
+            pad = s - widths[j]
+            if pad:
+                b = jnp.pad(b, ((0, 0), (0, pad)))
+            blocks.append(b)
+            mask.append(np.arange(s) < widths[j])
+        return StackedParts(jnp.stack(blocks), jnp.asarray(np.stack(mask)),
+                            tuple(widths))
 
     def rows(self, idx: jnp.ndarray) -> "VFLDataset":
         y = None if self.y is None else self.y[idx]

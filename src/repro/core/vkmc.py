@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.comm import CommLedger, null_ledger
-from repro.core.sensitivity import kmeans_assignment
+from repro.core.sensitivity import kmeans_assignment, kmeans_update
 from repro.core.vfl import VFLDataset
 
 
@@ -40,14 +40,26 @@ def kmeans_plusplus(
     k: int,
     w: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Weighted D^2 seeding.  O(nkd) total, via incremental min-distances."""
+    """Weighted D^2 seeding.  O(nkd) total, via incremental min-distances.
+
+    Distances to each new center use the cached-norm expansion
+    ``||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2``: the per-step cost is one
+    (n, d) matvec instead of materialising the full (n, d) difference —
+    one fewer (n, d) array per seeding step, and the row norms ``||x||^2``
+    are computed once for the whole sweep.
+    """
     n, d = X.shape
     ww = jnp.ones((n,)) if w is None else jnp.maximum(w, 0.0)
+    x2 = jnp.sum(X * X, axis=1)                                    # cached once
+
+    def d2_to(c):
+        # clamp: the expanded form can go slightly negative under fp
+        return jnp.maximum(x2 - 2.0 * (X @ c) + jnp.sum(c * c), 0.0)
 
     k0, key = jax.random.split(key)
     first = jax.random.categorical(k0, jnp.log(jnp.maximum(ww, 1e-30)))
     centers0 = jnp.zeros((k, d), X.dtype).at[0].set(X[first])
-    d2_0 = jnp.sum((X - X[first][None, :]) ** 2, axis=1)
+    d2_0 = d2_to(X[first])
 
     def body(carry, key_l):
         centers, d2, l = carry
@@ -55,7 +67,7 @@ def kmeans_plusplus(
         idx = jax.random.categorical(key_l, jnp.log(probs))
         c_new = X[idx]
         centers = centers.at[l].set(c_new)
-        d2 = jnp.minimum(d2, jnp.sum((X - c_new[None, :]) ** 2, axis=1))
+        d2 = jnp.minimum(d2, d2_to(c_new))
         return (centers, d2, l + 1), None
 
     keys = jax.random.split(key, k - 1)
@@ -71,15 +83,19 @@ def lloyd(
     iters: int = 25,
     use_kernel: bool = True,
 ) -> jax.Array:
-    """Weighted Lloyd. Empty clusters keep their previous center."""
+    """Weighted Lloyd. Empty clusters keep their previous center.
+
+    With ``use_kernel=True`` each iteration is ONE fused
+    ``kmeans_assign_update`` dispatch (one HBM read of X: assignment,
+    weighted cluster sums and counts come out of the same pass — the seed
+    path's assign kernel + two segment_sums collapsed).  ``use_kernel=False``
+    keeps the 3-pass pure-jnp composition.
+    """
     n, d = X.shape
-    k = init_centers.shape[0]
     ww = jnp.ones((n,)) if w is None else w
 
     def body(centers, _):
-        assign, _ = kmeans_assignment(X, centers, use_kernel=use_kernel)
-        wsum = jax.ops.segment_sum(ww, assign, num_segments=k)            # (k,)
-        csum = jax.ops.segment_sum(ww[:, None] * X, assign, num_segments=k)  # (k, d)
+        _, _, csum, wsum, _ = kmeans_update(X, centers, ww, use_kernel=use_kernel)
         new = jnp.where(wsum[:, None] > 0, csum / jnp.maximum(wsum, 1e-30)[:, None], centers)
         return new, None
 

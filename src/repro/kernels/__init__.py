@@ -1,6 +1,10 @@
 # Pallas TPU kernels for the paper's compute hot-spots:
-#   kmeans_assign  — blocked n x k distance + argmin (Algorithm 3 / Lloyd)
-#   leverage       — row-wise quadratic form x_i^T M x_i (Algorithm 2)
-#   weighted_gram  — X^T diag(w) X accumulation (coreset ridge solve)
+#   kmeans_assign        — blocked n x k distance + argmin (Algorithm 3 / Lloyd)
+#   kmeans_assign_update — fused single-pass assign + cluster sums/counts/cost
+#                          (one Lloyd iteration = ONE read of X; VKMC scoring
+#                          gets cluster_cost/cluster_size from the same pass)
+#   leverage             — row-wise quadratic form x_i^T M x_i (Algorithm 2)
+#   weighted_gram        — X^T diag(w) X accumulation (coreset ridge solve)
 # Each <name>.py holds the pl.pallas_call + BlockSpec; ops.py is the jit'd
-# dispatch layer; ref.py the pure-jnp oracles.
+# dispatch layer; ref.py the pure-jnp oracles.  All kernels accept leading
+# batch dims (folded into the grid by the native pallas vmap rule).

@@ -62,7 +62,17 @@ def kmeans_assign(
     block_n: int = 256,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Blocked assignment.  X: (n, d); C: (k, d) -> (assign int32 (n,), d2 f32 (n,))."""
+    """Blocked assignment.  X: (n, d); C: (k, d) -> (assign int32 (n,), d2 f32 (n,)).
+
+    Leading batch dimensions on either operand (X (..., n, d), C (..., k, d))
+    fold into the grid via the native pallas_call batching rule — one
+    dispatch, no broadcast of the unbatched operand.
+    """
+    if X.ndim > 2 or C.ndim > 2:
+        return jax.vmap(
+            lambda x, c: kmeans_assign(x, c, block_n=block_n, interpret=interpret),
+            in_axes=(0 if X.ndim > 2 else None, 0 if C.ndim > 2 else None),
+        )(X, C)
     n, d = X.shape
     k = C.shape[0]
     # MXU/VPU alignment: lanes = 128, sublanes = 8.

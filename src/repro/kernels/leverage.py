@@ -37,7 +37,17 @@ def leverage(
     block_n: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    """X: (n, d); M: (d, d) -> (n,) float32 quadratic forms."""
+    """X: (n, d); M: (d, d) -> (n,) float32 quadratic forms.
+
+    Leading batch dimensions (X (..., n, d), M (..., d, d)) fold into the
+    grid via the native pallas_call batching rule — one dispatch per call,
+    stacked-party scoring uses this with both operands batched over T.
+    """
+    if X.ndim > 2 or M.ndim > 2:
+        return jax.vmap(
+            lambda x, m: leverage(x, m, block_n=block_n, interpret=interpret),
+            in_axes=(0 if X.ndim > 2 else None, 0 if M.ndim > 2 else None),
+        )(X, M)
     n, d = X.shape
     d_pad = _round_up(max(d, 1), 128)
     bn = min(block_n, _round_up(n, 8))

@@ -13,11 +13,12 @@ interpret mode would be too slow, e.g. hypothesis sweeps with huge n).
 from __future__ import annotations
 
 import os
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 
 from repro.kernels import kmeans_assign as _ka
+from repro.kernels import kmeans_assign_update as _kau
 from repro.kernels import leverage as _lev
 from repro.kernels import ref
 from repro.kernels import weighted_gram as _wg
@@ -35,6 +36,20 @@ def kmeans_assign(X: jax.Array, C: jax.Array, *, block_n: int = 256) -> Tuple[ja
     if _disabled():
         return ref.kmeans_assign(X, C)
     return _ka.kmeans_assign(X, C, block_n=block_n, interpret=_interpret())
+
+
+def kmeans_assign_update(
+    X: jax.Array, C: jax.Array, w: Optional[jax.Array] = None, *, block_n: int = 256
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused single-pass (assign, d2, csum, wsum, ccost) — ONE read of X.
+
+    The ``REPRO_NO_PALLAS`` escape hatch routes to the assignment +
+    segment-sum composition (the seed's 3-pass Lloyd data flow), which is
+    also the semantic oracle the fused kernel is tested against.
+    """
+    if _disabled():
+        return ref.kmeans_assign_update(X, C, w)
+    return _kau.kmeans_assign_update(X, C, w, block_n=block_n, interpret=_interpret())
 
 
 def leverage(X: jax.Array, M: jax.Array, *, block_n: int = 512) -> jax.Array:

@@ -7,6 +7,7 @@ import numpy as np
 from repro.core import (
     CommLedger,
     VFLDataset,
+    build_coresets_batched,
     build_uniform_coreset,
     build_vkmc_coreset,
     distdim,
@@ -44,17 +45,40 @@ def test_vkmc_coreset_epsilon_over_probe_centers():
 
 
 def test_vkmc_coreset_beats_uniform():
-    k = 6
+    """C-KMEANS++ is no worse than U-KMEANS++ at matched budget (Table 1).
+
+    The seed version of this test flaked: it averaged ONE downstream Lloyd
+    solve per construction seed, and weighted Lloyd is local-optimum
+    roulette with a heavy upper tail (~2-3x cost basins) — any single draw
+    can land badly regardless of coreset fidelity, and a mean over 6 draws
+    is dominated by that basin luck.  Theorem 5.1 bounds the coreset's COST
+    RATIO, not which basin the downstream solver picks, so the statistic
+    here is basin-robust: all construction seeds are built in one compiled
+    ``build_coresets_batched`` call, each coreset is solved with best-of-3
+    downstream restarts (standard k-means practice), and the MEDIAN over
+    the fixed 12-seed batch is compared within a 3% margin.
+    """
+    k, m, R = 6, 120, 12
     ds = _clustered(jax.random.PRNGKey(6), n=4000, k=k, rho=0.9)
+    Xf = ds.full()
+    grid_c = build_coresets_batched("vkmc", ds, [m], key=jax.random.PRNGKey(100),
+                                    num_seeds=R, backend="ref", k=k)
+    grid_u = build_coresets_batched("uniform", ds, [m], key=jax.random.PRNGKey(200),
+                                    num_seeds=R)
 
-    def cost_of(builder, seed, **kw):
-        cs = builder(jax.random.PRNGKey(seed), ds, **kw)
-        XS, _, w = cs.materialize(ds)
-        cent = kmeans(jax.random.PRNGKey(7), XS, k, w)
-        return float(kmeans_cost(ds.full(), cent))
+    def median_cost(grid):
+        costs = []
+        for r in range(R):
+            cs = grid.coreset(r, 0)
+            XS, w = Xf[cs.indices], cs.weights
+            costs.append(min(
+                float(kmeans_cost(Xf, kmeans(jax.random.PRNGKey(7 + t), XS, k, w,
+                                             use_kernel=False),
+                                  use_kernel=False))
+                for t in range(3)))
+        return float(np.median(costs))
 
-    cs_c = np.mean([cost_of(build_vkmc_coreset, s, k=k, m=120) for s in range(6)])
-    un_c = np.mean([cost_of(build_uniform_coreset, s + 50, m=120) for s in range(6)])
+    cs_c, un_c = median_cost(grid_c), median_cost(grid_u)
     assert cs_c <= un_c * 1.03, (cs_c, un_c)
 
 

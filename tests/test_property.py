@@ -87,6 +87,73 @@ def test_selector_m_of(B, pct):
     assert 1 <= m <= 2 * B
 
 
+@given(st.integers(5, 200), st.integers(1, 8), st.integers(1, 32),
+       st.booleans(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_fused_kernel_matches_composition(n, k, d, weighted, seed):
+    """The fused single-pass kmeans_assign_update equals the seed data flow
+    (kmeans_assign + segment_sum composition) across shapes and weights."""
+    from repro.kernels import kmeans_assign_update as _kau
+    from repro.kernels import ops
+
+    kx, kc, kw = jax.random.split(jax.random.PRNGKey(seed), 3)
+    X = jax.random.normal(kx, (n, d))
+    C = jax.random.normal(kc, (k, d))
+    w = jax.random.uniform(kw, (n,)) + 0.1 if weighted else None
+    a_f, d2_f, cs_f, ws_f, cc_f = _kau.kmeans_assign_update(
+        X, C, w, interpret=True)
+    # compose from the SAME (pallas) assignment so ties cannot diverge
+    a_c, d2_c = ops.kmeans_assign(X, C)
+    ww = jnp.ones((n,)) if w is None else w
+    ws_c = jax.ops.segment_sum(ww, a_c, num_segments=k)
+    cs_c = jax.ops.segment_sum(ww[:, None] * X, a_c, num_segments=k)
+    cc_c = jax.ops.segment_sum(ww * d2_c, a_c, num_segments=k)
+    np.testing.assert_array_equal(np.asarray(a_f), np.asarray(a_c))
+    np.testing.assert_allclose(np.asarray(d2_f), np.asarray(d2_c), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ws_f), np.asarray(ws_c), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cs_f), np.asarray(cs_c), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(cc_f), np.asarray(cc_c), rtol=1e-4, atol=1e-3)
+
+
+@given(st.integers(2, 4), st.integers(5, 60), st.integers(1, 5),
+       st.integers(1, 16), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_kernels_vmap_safe_in_interpret_mode(B, n, k, d, seed):
+    """vmap folds a leading batch dim into the kernel grid for all three
+    kernels; every batch slice equals its standalone call."""
+    from repro.kernels import kmeans_assign as _ka
+    from repro.kernels import kmeans_assign_update as _kau
+    from repro.kernels import leverage as _lev
+
+    key = jax.random.PRNGKey(seed)
+    X = jax.random.normal(jax.random.fold_in(key, 0), (n, d))
+    Cs = jax.random.normal(jax.random.fold_in(key, 1), (B, k, d))
+    A = jax.random.normal(jax.random.fold_in(key, 2), (B, d, d))
+    Ms = jnp.einsum("bij,bkj->bik", A, A) / d
+
+    # block_n=16 forces multi-step grids for n > 16 — the vmapped scratch
+    # init/flush across grid steps is the load-bearing part of the claim
+    a_v, d_v = jax.vmap(
+        lambda c: _ka.kmeans_assign(X, c, block_n=16, interpret=True))(Cs)
+    lev_v = jax.vmap(
+        lambda m: _lev.leverage(X, m, block_n=16, interpret=True))(Ms)
+    f_v = jax.vmap(
+        lambda c: _kau.kmeans_assign_update(X, c, block_n=16, interpret=True))(Cs)
+    for b in range(B):
+        a_b, d_b = _ka.kmeans_assign(X, Cs[b], block_n=16, interpret=True)
+        np.testing.assert_array_equal(np.asarray(a_v[b]), np.asarray(a_b))
+        np.testing.assert_allclose(np.asarray(d_v[b]), np.asarray(d_b),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(lev_v[b]),
+            np.asarray(_lev.leverage(X, Ms[b], block_n=16, interpret=True)),
+            rtol=1e-5, atol=1e-5)
+        f_b = _kau.kmeans_assign_update(X, Cs[b], block_n=16, interpret=True)
+        for o_v, o_b in zip(f_v, f_b):
+            np.testing.assert_allclose(np.asarray(o_v[b]), np.asarray(o_b),
+                                       rtol=1e-5, atol=1e-5)
+
+
 @given(st.integers(4, 64), st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
 @settings(max_examples=10, deadline=None)
 def test_dis_estimator_positive_combination(n, T, seed):

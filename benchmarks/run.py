@@ -7,7 +7,8 @@ benchmarks/artifacts/.
 
   PYTHONPATH=src python -m benchmarks.run           # fast (CPU-budget) sizes
   PYTHONPATH=src python -m benchmarks.run --full    # paper-scale n / repeats
-  PYTHONPATH=src python -m benchmarks.run --only vrlr_main,kernel_micro
+  PYTHONPATH=src python -m benchmarks.run --sections kernel_micro,streaming
+  PYTHONPATH=src python -m benchmarks.run --list    # show section names
 """
 
 from __future__ import annotations
@@ -33,6 +34,7 @@ MODULES = [
     "second_dataset",   # Fig 10/11 (KC-House profile)
     "kernel_micro",     # Pallas kernel us/call
     "fused_lloyd",      # fused vs seed Lloyd step: passes-over-X + us/step
+    "streaming",        # streaming vs materialized: rows/sec + peak bytes
     "selector_step",    # beyond-paper: LLM coreset batch selection
     "assumption_sweep",  # beyond-paper: Assumption 4.1/5.1 violation sweep
 ]
@@ -41,9 +43,19 @@ MODULES = [
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
-    ap.add_argument("--only", default=None, help="comma-separated module list")
+    ap.add_argument("--sections", "--only", dest="sections", default=None,
+                    help="comma-separated subset of bench modules to run "
+                         f"(known: {','.join(MODULES)})")
+    ap.add_argument("--list", action="store_true",
+                    help="print the section names and exit")
     args = ap.parse_args()
-    mods = args.only.split(",") if args.only else MODULES
+    if args.list:
+        print("\n".join(MODULES))
+        return 0
+    mods = args.sections.split(",") if args.sections else MODULES
+    unknown = [m for m in mods if m not in MODULES]
+    if unknown:
+        ap.error(f"unknown sections {unknown}; known: {','.join(MODULES)}")
 
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,141 @@
+"""Streaming vs materialized coreset construction: rows/sec + peak live bytes.
+
+The materialized pipeline puts the full (T, n, s) stacked design and the
+(T, n) score matrix on device; the streaming pipeline
+(``build_coreset_streaming``) keeps the dataset host-resident (numpy-backed
+``VFLDataset``) and holds ONE (T, bs, s) block at a time, so peak live
+device bytes are O(block_size * d) while the materialized path's are
+O(n * d).  Both are *measured*, not asserted: the dataset is generated in
+host numpy, and a ``jax.live_arrays()`` census runs after every block step
+(the ``probe`` hook) and around the materialized build — the streamed
+analogue of ``fused_lloyd``'s structural passes-over-X check.
+
+Rows land in BENCH_kernels.json under the ``streaming`` section:
+``{path, n, d, T, m, block_size, rows_per_s, peak_live_bytes, data_passes}``.
+In ``--fast`` mode n = 50k (the CI smoke cap); ``--full`` runs n = 10^6,
+where the streamed peak stays flat across n while the materialized peak
+scales with it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import write_bench_json, write_rows
+from repro.core import CommLedger, VFLDataset, build_coreset, build_coreset_streaming
+
+BENCH = "streaming"
+
+
+def live_bytes() -> int:
+    """Total bytes of live device arrays right now."""
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in jax.live_arrays())
+
+
+def _host_dataset(n: int, d: int, T: int):
+    """Numpy-backed VFLDataset — nothing lands on device until a block does."""
+    rng = np.random.default_rng(7)
+    X = rng.standard_normal((n, d), dtype=np.float32)
+    theta = rng.standard_normal((d,), dtype=np.float32)
+    y = X @ theta + 0.1 * rng.standard_normal(n, dtype=np.float32)
+    parts, start = [], 0
+    base, rem = divmod(d, T)
+    for j in range(T):
+        w = base + (1 if j < rem else 0)
+        parts.append(X[:, start:start + w])
+        start += w
+    return VFLDataset(parts, y)
+
+
+class _Peak:
+    """Running max of the live-bytes census (the streaming probe)."""
+
+    def __init__(self):
+        self.peak = 0
+
+    def __call__(self):
+        self.peak = max(self.peak, live_bytes())
+
+
+def _run_streaming(ds, m: int, block_size: int):
+    peak = _Peak()
+    led = CommLedger()
+    t0 = time.time()
+    cs = build_coreset_streaming("vrlr", ds, m, key=jax.random.PRNGKey(0),
+                                 backend="ref", block_size=block_size,
+                                 ledger=led, probe=peak)
+    jax.block_until_ready(cs.weights)
+    wall = time.time() - t0
+    peak()
+    return cs, wall, peak.peak, led.total
+
+
+def _run_materialized(ds_host, m: int):
+    """The flat pipeline on a device-resident copy of the same data."""
+    ds = VFLDataset([jnp.asarray(p) for p in ds_host.parts],
+                    jnp.asarray(ds_host.y))
+    led = CommLedger()
+    t0 = time.time()
+    cs = build_coreset("vrlr", ds, m, key=jax.random.PRNGKey(0),
+                       backend="ref", ledger=led)
+    jax.block_until_ready(cs.weights)
+    wall = time.time() - t0
+    peak = live_bytes()          # scores + stacked design are still live here
+    del ds
+    return cs, wall, peak, led.total
+
+
+def run(fast: bool = True):
+    n = 50_000 if fast else 1_000_000
+    d, T, m = 30, 3, 512
+    block_sizes = [4096, 16384, 65536]
+    ds_host = _host_dataset(n, d, T)
+
+    rows, entries = [], []
+
+    def record(path, wall, peak, comm, block_size=None, passes=None):
+        label = path if block_size is None else f"{path}-b{block_size}"
+        rows.append({"bench": BENCH, "method": label, "size": n,
+                     "cost_mean": round(peak / 1e6, 3), "cost_std": 0.0,
+                     "comm": comm, "wall_s": round(wall, 4)})
+        entry = {"path": label, "n": n, "d": d, "T": T, "m": m,
+                 "rows_per_s": round(n / max(wall, 1e-9), 1),
+                 "peak_live_bytes": int(peak)}
+        if block_size is not None:
+            entry["block_size"] = block_size
+            # the O(block_size * d) yardstick the peak is judged against:
+            # one labeled (T, bs, s) block + the (T, s, s)/(T, nb) state
+            entry["block_bytes"] = int(T * block_size * (d // T + 1) * 4)
+        if passes is not None:
+            entry["data_passes"] = passes
+        entries.append(entry)
+
+    # materialized reference (device-resident flat pipeline)
+    _, wall, peak, comm = _run_materialized(ds_host, m)
+    record("materialized", wall, peak, comm)
+
+    # streaming at a block-size sweep (vrlr ref = 2 full passes: Gram + masses)
+    for bsz in block_sizes:
+        if bsz >= n:
+            continue
+        cs, wall, peak, comm = _run_streaming(ds_host, m, bsz)
+        record("streaming", wall, peak, comm, block_size=bsz, passes=2)
+
+    write_rows(BENCH, rows)
+    write_bench_json(BENCH, entries)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true", default=True)
+    ap.add_argument("--full", dest="fast", action="store_false")
+    args = ap.parse_args()
+    for r in run(fast=args.fast):
+        print(r)

@@ -2,12 +2,16 @@
 construction for vertical federated learning.
 
 Public API:
-  build_coreset, build_coreset_jit, build_coresets_batched, CoresetTask,
-  register_task, get_task, CORESET_TASKS, SCORE_BACKENDS  (api — unified pipeline)
+  build_coreset, build_coreset_jit, build_coresets_batched,
+  build_coreset_streaming, CoresetTask, register_task, get_task,
+  CORESET_TASKS, SCORE_BACKENDS, resolve_backend          (api — unified pipeline)
   VFLDataset, split_columns, standardize                  (vfl)
   CommLedger, CommSchedule, theoretical_dis_cost          (comm)
-  dis_plan, dis_plan_full, server_plan, uniform_plan,
-  dis_sample, uniform_sample, dis_marginals               (dis — Algorithm 1)
+  dis_plan, dis_plan_full, dis_plan_blocked, server_plan, uniform_plan,
+  dis_sample, uniform_sample, dis_marginals,
+  dis_blocked_marginals, blocked_geometry                 (dis — Algorithm 1)
+  StreamScorer, make_stream_scorer, dis_plan_streamed,
+  vrlr_block_masses_sharded                               (streaming — block-scan n)
   vrlr_local_scores, vkmc_local_scores, ...               (sensitivity — Alg 2/3 local)
   Coreset, vrlr_coreset_ratio, vkmc_coreset_ratio         (coreset)
   ridge_closed_form, fista, saga_ridge, solve             (vrlr solvers)
@@ -30,20 +34,32 @@ from repro.core.api import (
     CoresetTask,
     build_coreset,
     build_coreset_jit,
+    build_coreset_streaming,
     build_coresets_batched,
     get_task,
     register_task,
+    resolve_backend,
 )
 from repro.core.comm import CommLedger, CommSchedule, theoretical_dis_cost
 from repro.core.coreset import Coreset, vkmc_coreset_ratio, vrlr_coreset_ratio
 from repro.core.dis import (
+    blocked_geometry,
+    dis_blocked_marginals,
     dis_marginals,
     dis_plan,
+    dis_plan_blocked,
     dis_plan_full,
     dis_sample,
     server_plan,
     uniform_plan,
     uniform_sample,
+)
+from repro.core.streaming import (
+    StreamScorer,
+    dis_plan_streamed,
+    make_stream_scorer,
+    register_stream_scorer,
+    vrlr_block_masses_sharded,
 )
 from repro.core.sensitivity import (
     kmeans_assignment,
@@ -89,8 +105,11 @@ def build_vrlr_coreset(
 ) -> Coreset:
     """Deprecated: use ``build_coreset("vrlr", ds, m, key=key, ...)``."""
     _deprecated("build_vrlr_coreset", 'build_coreset("vrlr", ...)')
+    # use_kernel=True maps to "auto" (kernels where they profit — TPU/GPU),
+    # so the shim keeps resolving to the same backend as build_coreset's
+    # default and stays draw-identical to it on every platform.
     return build_coreset("vrlr", ds, m, key=key,
-                         backend="pallas" if use_kernel else "ref",
+                         backend="auto" if use_kernel else "ref",
                          ledger=ledger)
 
 
@@ -107,7 +126,7 @@ def build_vkmc_coreset(
     """Deprecated: use ``build_coreset("vkmc", ds, m, key=key, k=k, ...)``."""
     _deprecated("build_vkmc_coreset", 'build_coreset("vkmc", ...)')
     return build_coreset("vkmc", ds, m, key=key,
-                         backend="pallas" if use_kernel else "ref",
+                         backend="auto" if use_kernel else "ref",
                          ledger=ledger, k=k, alpha=alpha,
                          local_iters=local_iters)
 

@@ -23,6 +23,9 @@ DIS sampling -> importance weights — which this module makes explicit:
     jit-compiled ``vmap(vmap(...))`` call over the pure
     :func:`repro.core.dis.dis_plan_full` core, using the ``m_cap`` prefix
     convention for the budget grid.
+  * :func:`build_coreset_streaming` — n as a streaming dimension: block-scan
+    scoring (:mod:`repro.core.streaming`) + the hierarchical (party, block)
+    DIS sampler, peak device memory O(block_size * d) at any n.
 
 Key-consumption choreography matches the seed builders exactly, so the
 deprecated ``build_vrlr_coreset`` / ``build_vkmc_coreset`` shims in
@@ -53,6 +56,24 @@ from repro.utils.registry import Registry
 SCORE_BACKENDS = ("pallas", "ref", "norm")
 
 CORESET_TASKS = Registry("coreset_task")
+
+
+def resolve_backend(backend: str) -> str:
+    """Resolve ``"auto"`` to a concrete ScoreBackend for this process.
+
+    ``auto`` picks ``pallas`` on TPU/GPU (compiled kernels) and ``ref`` on
+    CPU — interpret-mode Pallas is 25-60x slower than the compiled jnp
+    references there (BENCH_kernels.json), so a silent ``pallas`` default
+    was a CPU footgun.  Explicit names pass through (and are validated).
+    """
+    if backend == "auto":
+        return "pallas" if jax.default_backend() in ("tpu", "gpu") else "ref"
+    if backend not in SCORE_BACKENDS:
+        raise ValueError(
+            f"unknown score backend {backend!r}; expected 'auto' or one of "
+            f"{SCORE_BACKENDS}"
+        )
+    return backend
 
 
 def _key_data(k: jax.Array) -> np.ndarray:
@@ -191,19 +212,21 @@ def build_coreset(
     budget: int,
     *,
     key: jax.Array,
-    backend: str = "pallas",
+    backend: str = "auto",
     ledger: Optional[CommLedger] = None,
     **params,
 ) -> Coreset:
     """Build one coreset of ``budget`` rows for ``task`` on ``ds``.
 
     Task-specific knobs (vkmc's ``k``/``alpha``/``local_iters``) pass through
-    ``**params`` to the task's score function.  The exact per-round
-    communication bill is derived from the realised plan and recorded on
-    ``ledger`` (when given); ``Coreset.comm_units`` is always this
-    construction's own total.
+    ``**params`` to the task's score function.  ``backend`` defaults to
+    ``"auto"`` (:func:`resolve_backend`: kernels on TPU/GPU, jnp refs on
+    CPU).  The exact per-round communication bill is derived from the
+    realised plan and recorded on ``ledger`` (when given);
+    ``Coreset.comm_units`` is always this construction's own total.
     """
     spec = get_task(task)
+    backend = resolve_backend(backend)
     m = int(budget)
     if spec.needs_labels and ds.y is None:
         raise ValueError(f"{spec.name} requires labels at party T")
@@ -235,13 +258,14 @@ def build_coreset_jit(
     budget: int,
     *,
     key: jax.Array,
-    backend: str = "pallas",
+    backend: str = "auto",
     ledger: Optional[CommLedger] = None,
     **params,
 ) -> Coreset:
     """One-dispatch :func:`build_coreset`: scoring + :func:`dis_plan_full`
     fused into a single jitted function, cached per ``(task, shapes,
-    backend, params)``.
+    backend, params)``.  ``backend="auto"`` resolves per
+    :func:`resolve_backend` before the cache key is formed.
 
     The sequential :func:`build_coreset` stays the fidelity reference — it
     runs scoring eagerly and is the bit-identity anchor against the seed;
@@ -254,10 +278,10 @@ def build_coreset_jit(
     sequential path where cross-version draw stability matters.
     """
     spec = get_task(task)
+    backend = resolve_backend(backend)
     m = int(budget)
     if spec.needs_labels and ds.y is None:
         raise ValueError(f"{spec.name} requires labels at party T")
-    _use_kernel(backend)  # validate the backend name up front
 
     if spec.score_fn is None:
         cache_key = (spec, ds.n, m)
@@ -285,6 +309,61 @@ def build_coreset_jit(
     plan = fn(key, tuple(ds.parts), ds.y)
     if not bool(plan.totals.sum() > 0):
         raise ValueError("DIS requires a positive total score")
+    schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
+    schedule.record(ledger)
+    return Coreset(plan.indices, plan.weights, schedule.total)
+
+
+# --------------------------------------------------------------------------
+# Streaming construction: block-scan scoring + hierarchical DIS
+# --------------------------------------------------------------------------
+
+def build_coreset_streaming(
+    task: Union[str, CoresetTask],
+    ds: VFLDataset,
+    budget: int,
+    *,
+    key: jax.Array,
+    block_size: int = 65536,
+    backend: str = "auto",
+    ledger: Optional[CommLedger] = None,
+    probe: Optional[Callable[[], None]] = None,
+    **params,
+) -> Coreset:
+    """Build one coreset with n as a STREAMING dimension: block-scan scoring
+    plus the hierarchical (party, block)-cell DIS sampler, so peak device
+    memory is O(block_size * d) — the (T, n) score matrix and the (n, d)
+    design are never materialized (pass a numpy-backed ``VFLDataset`` to
+    keep the raw data off-device too).
+
+    The sampled marginal is exactly the flat plan's g_i/G (the two-level
+    sampling telescopes — see :func:`repro.core.dis.dis_plan_blocked`), and
+    with ``block_size >= ds.n`` the draws coincide with
+    :func:`build_coreset` bit for bit when the blockwise scores do (e.g.
+    the row-local ``norm`` backend).  ``probe`` (if given) is invoked once
+    per block step — instrumentation hook for the memory benchmark.
+    The communication bill is unchanged: blocking is server-side
+    bookkeeping; parties still ship one scalar mass per round-1 row
+    (aggregated per party), m indices, and m score shares.
+    """
+    from repro.core.streaming import dis_plan_streamed, make_stream_scorer
+
+    spec = get_task(task)
+    backend = resolve_backend(backend)
+    m = int(budget)
+    if spec.needs_labels and ds.y is None:
+        raise ValueError(f"{spec.name} requires labels at party T")
+    if spec.score_fn is None:
+        S, w = uniform_plan(key, ds.n, m)
+        schedule = CommSchedule.uniform(ds.T, m)
+        schedule.record(ledger)
+        return Coreset(S, w, schedule.total)
+
+    scorer = make_stream_scorer(spec.name, key, ds, block_size, backend,
+                                probe=probe, **params)
+    if not bool(scorer.masses.sum() > 0):
+        raise ValueError("DIS requires a positive total score")
+    plan = dis_plan_streamed(scorer, m, probe=probe)
     schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
     schedule.record(ledger)
     return Coreset(plan.indices, plan.weights, schedule.total)
@@ -346,6 +425,7 @@ def build_coresets_batched(
     num_seeds: int = 1,
     keys: Optional[jax.Array] = None,
     backend: str = "ref",
+    m_cap: Optional[int] = None,
     **params,
 ) -> BatchedCoresets:
     """Construct coresets for every (seed, budget) pair in one compiled call.
@@ -361,13 +441,26 @@ def build_coresets_batched(
     ``backend`` defaults to ``"ref"`` (the pure-jnp scores are cheapest on
     a CPU container); ``"pallas"`` also vmaps — the kernels fold the seed
     batch into their grid via the native pallas batching rule, so the whole
-    grid is still one dispatch (interpret-mode on CPU, compiled on TPU).
+    grid is still one dispatch (interpret-mode on CPU, compiled on TPU) —
+    and ``"auto"`` resolves per :func:`resolve_backend`.  ``m_cap``
+    overrides the draw capacity (defaults to ``max(ms)``); every budget
+    must lie in [1, m_cap] or the builder raises before tracing.
     """
     spec = get_task(task)
+    backend = resolve_backend(backend)
     ms = tuple(int(m) for m in ms)
     if not ms:
         raise ValueError("empty budget grid")
-    m_cap = max(ms)
+    m_cap = max(ms) if m_cap is None else int(m_cap)
+    # host-side validation: a budget outside [1, m_cap] would silently
+    # produce a garbage masked prefix (negative-length or truncated draws)
+    # inside the traced core — fail loudly here instead.
+    bad = [m for m in ms if m < 1 or m > m_cap]
+    if bad:
+        raise ValueError(
+            f"budgets {bad} outside [1, m_cap={m_cap}]; every budget in the "
+            f"grid must be >= 1 and <= the draw capacity"
+        )
     if keys is None:
         if key is None:
             raise ValueError("pass either `key` (+ num_seeds) or `keys`")

@@ -157,6 +157,113 @@ def dis_plan_full(
     return DisPlan(S, w, a, G_j)
 
 
+def blocked_geometry(n: int, block_size: int) -> Tuple[int, int]:
+    """(num_blocks nb, rows-per-block bs) for a ``block_size`` row chunking —
+    delegates to the canonical :func:`repro.core.vfl.block_geometry`, so the
+    sampler's cell grid and ``VFLDataset.block``'s chunking can never drift.
+    ``block_size >= n`` degenerates to ONE unpadded block — the regime where
+    :func:`dis_plan_blocked` is bit-identical to :func:`dis_plan_full`.
+    """
+    from repro.core.vfl import block_geometry
+
+    return block_geometry(n, block_size)
+
+
+def dis_plan_blocked(
+    key: jax.Array,
+    scores: jax.Array,
+    m: Union[int, jax.Array],
+    block_size: int,
+    m_cap: Optional[int] = None,
+) -> DisPlan:
+    """Hierarchical (two-level) DIS: Algorithm 1 applied recursively to
+    (party, row-block) cells.
+
+    Round 1 samples *cells* (j, b) from the block masses
+    G^(j,b) = sum_{i in block b} g_i^(j); round 2 samples a row within the
+    chosen cell ~ g_i^(j)/G^(j,b).  The induced marginal telescopes,
+
+        P(i via j) = (G^(j,b(i))/G) * (g_i^(j)/G^(j,b(i))) = g_i^(j)/G,
+
+    i.e. EXACTLY the flat plan's marginal (:func:`dis_blocked_marginals`
+    verifies this cancellation numerically) — the blocking is invisible to
+    Theorem 3.1.  What it buys: the sampler only ever needs block masses
+    (T, nb) plus the scores of *touched* blocks, so the streaming builder
+    (:mod:`repro.core.streaming`) never materializes the (T, n) score
+    matrix.  This in-memory variant takes the full scores (it is the
+    semantic oracle the streamed path is tested against) and consumes a
+    ``T*nb + 1``-subkey chain; with ``block_size >= n`` that chain, the cell
+    masses, and every draw coincide with :func:`dis_plan_full` bit for bit.
+    """
+    T, n = scores.shape
+    scores = scores.astype(_float_dtype())
+    nb, bs = blocked_geometry(n, block_size)
+    static_m = m_cap is None or (isinstance(m, int) and int(m) == int(m_cap))
+    cap = int(m) if m_cap is None else int(m_cap)
+    valid = jnp.arange(cap) < m
+
+    npad = nb * bs
+    sp = jnp.pad(scores, ((0, 0), (0, npad - n))).reshape(T, nb, bs)
+    row_ok = (jnp.arange(npad) < n).reshape(nb, bs)            # (nb, bs)
+
+    ncells = T * nb
+    subs = _key_chain(key, ncells + 1)
+    masses = jnp.sum(sp, axis=2)                               # (T, nb)
+    G = masses.sum()
+
+    # ---- round 1: cells ~ Multinomial(m, G_jb/G) ----------------------------
+    draws = jax.random.categorical(
+        subs[0], jnp.log(jnp.maximum(masses.reshape(-1), 1e-30)), shape=(cap,)
+    )
+    a_cells = jnp.zeros((ncells,), jnp.int32).at[draws].add(valid.astype(jnp.int32))
+
+    # ---- round 2: within-cell row sampling, then server union ---------------
+    # Padded rows get -inf logits (probability exactly 0); valid rows keep the
+    # flat plan's 1e-30 floor.  Cells are ordered party-major (j*nb + b), so
+    # nb == 1 reproduces dis_plan_full's per-party candidate streams.
+    cell_logits = jnp.where(
+        row_ok[None, :, :], jnp.log(jnp.maximum(sp, 1e-30)), -jnp.inf
+    ).reshape(ncells, bs)
+    cand_local = jax.vmap(
+        lambda k, lg: jax.random.categorical(k, lg, shape=(cap,))
+    )(subs[1:], cell_logits)                                   # (ncells, cap)
+    offsets = jnp.tile(jnp.arange(nb) * bs, T)                 # cell -> row base
+    cand = cand_local + offsets[:, None]
+    take = jnp.arange(cap)[None, :] < a_cells[:, None]
+    order = jnp.argsort(~take.reshape(-1), stable=True)        # taken slots first
+    S = cand.reshape(-1)[order][:cap]
+
+    # ---- round 3: per-sample combined scores, weights at server -------------
+    def add_party(acc, g_row):
+        return acc + g_row[S], None
+
+    g_sum_S, _ = jax.lax.scan(add_party, jnp.zeros((cap,), scores.dtype), scores)
+    w = G / (m * jnp.maximum(g_sum_S, 1e-30))
+    if not static_m:
+        S = jnp.where(valid, S, 0)
+        w = jnp.where(valid, w, 0.0)
+    a = a_cells.reshape(T, nb).sum(axis=1)                     # per-party a_j
+    return DisPlan(S, w, a, masses.sum(axis=1))
+
+
+def dis_blocked_marginals(
+    local_scores: List[jax.Array], block_size: int
+) -> np.ndarray:
+    """The exact per-index marginal induced by :func:`dis_plan_blocked`,
+    computed WITHOUT algebraic simplification (float64): sum over cells of
+    P(cell) * P(i | cell).  Tests assert this telescopes back to the flat
+    :func:`dis_marginals` — the hierarchical sampler's correctness claim."""
+    g = np.stack([np.asarray(x, np.float64) for x in local_scores])  # (T, n)
+    T, n = g.shape
+    nb, bs = blocked_geometry(n, block_size)
+    gp = np.pad(g, ((0, 0), (0, nb * bs - n))).reshape(T, nb, bs)
+    masses = gp.sum(axis=2)                                    # (T, nb)
+    G = masses.sum()
+    within = gp / np.maximum(masses[:, :, None], np.finfo(np.float64).tiny)
+    per_cell = (masses[:, :, None] / G) * within               # (T, nb, bs)
+    return per_cell.reshape(T, -1)[:, :n].sum(axis=0)
+
+
 def dis_plan(
     key: jax.Array,
     scores: jax.Array,

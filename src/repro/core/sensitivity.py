@@ -84,6 +84,22 @@ def vrlr_local_scores(
     return leverage_scores(Xj, use_kernel=use_kernel) + 1.0 / n
 
 
+def batched_gram_pinv(G: jax.Array, rcond: float = 1e-6) -> jax.Array:
+    """Eigen-pseudo-inverse of a (T, s, s) stack of party Grams.
+
+    The shared core of :func:`vrlr_scores_stacked` (one-shot Gram) and the
+    streaming block-scan path (:mod:`repro.core.streaming`, Gram accumulated
+    over row blocks): zero padding contributes zero eigenvalues that fall
+    below the rcond cutoff, so the batched pinv equals the per-party one
+    embedded.
+    """
+    evals, evecs = jnp.linalg.eigh(G)
+    cutoff = rcond * jnp.maximum(evals.max(axis=1), 0.0)   # (T,)
+    inv = jnp.where(evals > cutoff[:, None],
+                    1.0 / jnp.maximum(evals, 1e-30), 0.0)
+    return jnp.einsum("tsu,tu,tru->tsr", evecs, inv, evecs)
+
+
 def vrlr_scores_stacked(
     blocks: jax.Array, rcond: float = 1e-6, use_kernel: bool = True
 ) -> jax.Array:
@@ -101,11 +117,7 @@ def vrlr_scores_stacked(
     f = blocks.astype(jnp.float32)
     T, n, s = f.shape
     G = jnp.einsum("tns,tnu->tsu", f, f)                   # (T, s, s)
-    evals, evecs = jnp.linalg.eigh(G)
-    cutoff = rcond * jnp.maximum(evals.max(axis=1), 0.0)   # (T,)
-    inv = jnp.where(evals > cutoff[:, None],
-                    1.0 / jnp.maximum(evals, 1e-30), 0.0)
-    M = jnp.einsum("tsu,tu,tru->tsr", evecs, inv, evecs)   # batched pinv(Gram)
+    M = batched_gram_pinv(G, rcond)                        # batched pinv(Gram)
     if use_kernel:
         lev = kops.leverage(f, M)                          # (T, n), one dispatch
     else:

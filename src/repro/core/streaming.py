@@ -1,0 +1,467 @@
+"""Streaming block-scan scoring + hierarchical DIS: million-row coreset
+construction on fixed device memory.
+
+The materialized pipeline (:mod:`repro.core.api`) holds the full (T, n, s)
+stacked design and a (T, n) score matrix on device — its memory scales with
+n even though the protocol's *communication* scales with m.  This module
+makes n a streaming dimension end to end:
+
+  * **Block-scan scoring** — every score path is restructured into passes
+    over (T, bs, s) row blocks (``VFLDataset.blocks``), with only ONE block
+    device-resident at a time.  VRLR: pass 1 accumulates the per-party
+    (s, s) Gram across blocks (the d x d sufficient statistic — the same
+    VMEM-scratch accumulation pattern the Pallas ``weighted_gram`` /
+    ``kmeans_assign_update`` kernels use across their sequential grid, here
+    lifted to HBM-block granularity), then the eigen-pseudo-inverse is
+    computed ONCE and pass 2 emits leverage scores block by block.  VKMC:
+    local k-means runs on a bounded uniform row subsample, pass 2
+    accumulates global cluster sizes/costs via the fused assign-update
+    kernel per block, pass 3 emits sensitivities block by block.
+  * **Hierarchical DIS** (:func:`repro.core.dis.dis_plan_blocked`) — round 1
+    samples (party, block) cells from the (T, nb) block-mass table, round 2
+    samples rows within only the *touched* blocks (scores recomputed on
+    demand), so the (T, n) score matrix never exists.  The induced marginal
+    telescopes to exactly the flat plan's g_i/G.
+  * **Data-parallel masses** (:func:`vrlr_block_masses_sharded`) — rows
+    sharded over the mesh's ``data`` axis via ``shard_map``; each device
+    scores its row shard and the block-mass table is combined with one psum
+    (plus one (T, s, s) Gram psum — the mesh analogue of DIS round 1's T
+    scalars).  Communication stays the DIS bill; compute scales with
+    devices.
+
+With a numpy-backed :class:`~repro.core.vfl.VFLDataset` the dataset lives in
+host memory and peak *device* memory is O(block_size * d) at any n —
+measured by ``benchmarks/streaming.py`` and recorded in BENCH_kernels.json.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dis import DisPlan, _float_dtype, _key_chain
+from repro.core.sensitivity import batched_gram_pinv, kmeans_update, norm_scores
+from repro.core.vfl import VFLDataset
+from repro.core.vkmc import kmeans
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamScorer:
+    """Block-granular view of one task's party-local scores.
+
+    ``masses[j, b]`` is the block mass G^(j,b) = sum_{i in block b} g_i^(j)
+    (the round-1 table of the hierarchical sampler); ``score_block(b)``
+    recomputes the (T, bs) scores of block ``b`` on demand, with padded rows
+    exactly 0.  ``data_passes`` counts full passes over the dataset the
+    scorer spent building its state + mass table (the streamed analogue of
+    ``fused_lloyd``'s passes-over-X census).
+    """
+
+    T: int
+    n: int
+    nb: int
+    bs: int
+    masses: jax.Array                       # (T, nb) float32
+    dis_key: jax.Array
+    score_block: Callable[[int], jax.Array]
+    data_passes: int
+
+
+# (task name) -> factory(key, ds, block_size, backend, probe, **params)
+STREAM_SCORERS: Dict[str, Callable[..., StreamScorer]] = {}
+
+
+def register_stream_scorer(name: str):
+    """Decorator: register a :class:`StreamScorer` factory for task ``name``."""
+
+    def deco(fn):
+        if name in STREAM_SCORERS:
+            raise KeyError(f"stream scorer for {name!r} already registered")
+        STREAM_SCORERS[name] = fn
+        return fn
+
+    return deco
+
+
+def make_stream_scorer(
+    name: str,
+    key: jax.Array,
+    ds: VFLDataset,
+    block_size: int,
+    backend: str,
+    probe: Optional[Callable[[], None]] = None,
+    **params,
+) -> StreamScorer:
+    factory = STREAM_SCORERS.get(name)
+    if factory is None:
+        raise ValueError(
+            f"no streaming scorer registered for task {name!r}; "
+            f"available: {sorted(STREAM_SCORERS)}"
+        )
+    return factory(key, ds, block_size, backend, probe=probe, **params)
+
+
+def _noop() -> None:
+    return None
+
+
+def _row_valid(bs: int, nvalid) -> jax.Array:
+    return (jnp.arange(bs) < nvalid).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# VRLR: Gram block-scan -> one pinv -> blockwise leverage
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def _gram_step(G, blk, nvalid, *, use_kernel: bool):
+    """G += blk^T diag(valid) blk, batched over the party axis.  Padded rows
+    are zero so the mask is belt-and-braces; the kernel path streams the
+    block through the Pallas ``weighted_gram`` grid accumulator."""
+    T, bs, _ = blk.shape
+    f = blk.astype(jnp.float32)
+    wv = jnp.broadcast_to(_row_valid(bs, nvalid), (T, bs))
+    if use_kernel:
+        Gb = kops.weighted_gram(f, wv)
+    else:
+        Gb = jnp.einsum("tns,tn,tnu->tsu", f, wv, f)
+    return G + Gb
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def _vrlr_score_block(blk, M, nvalid, n, *, use_kernel: bool):
+    """clip(x_i^T M x_i, 0, 1) + 1/n per party; 0 on padded rows."""
+    f = blk.astype(jnp.float32)
+    if use_kernel:
+        lev = kops.leverage(f, M)
+    else:
+        lev = jnp.einsum("tns,tsr,tnr->tn", f, M, f)
+    sc = jnp.clip(lev, 0.0, 1.0) + 1.0 / n
+    ok = jnp.arange(f.shape[1]) < nvalid
+    return jnp.where(ok[None, :], sc, 0.0)
+
+
+@jax.jit
+def _norm_score_block(blk, nvalid, n):
+    """Row-norm^2 ablation scores, blockwise.  Row-local, so each row's value
+    is bitwise identical to the materialized ``norm`` backend's."""
+    sc = norm_scores(blk) + 1.0 / n
+    ok = jnp.arange(blk.shape[1]) < nvalid
+    return jnp.where(ok[None, :], sc, 0.0)
+
+
+def _mass_table(ds, block_size, score_block, probe):
+    """One pass over the blocks collecting the (T, nb) block-mass table."""
+    nb, _ = ds.block_geometry(block_size)
+    masses = []
+    for b in range(nb):
+        masses.append(jnp.sum(score_block(b), axis=1))
+        probe()
+    return jnp.stack(masses, axis=1)                       # (T, nb)
+
+
+@register_stream_scorer("vrlr")
+def vrlr_stream_scorer(
+    key, ds: VFLDataset, block_size: int, backend: str,
+    probe: Optional[Callable[[], None]] = None, rcond: float = 1e-6,
+) -> StreamScorer:
+    """Algorithm 2's scores without ever holding (n, d): one block-scan pass
+    accumulates each party's (s, s) Gram, the eigen-pseudo-inverse is taken
+    once, and scores are re-emitted per block from (block, M) alone.  The
+    key passes through untouched, matching the materialized ``vrlr`` task's
+    deterministic-score contract.
+    """
+    probe = probe or _noop
+    use_kernel = backend == "pallas"
+    nb, bs = ds.block_geometry(block_size)
+    _, s = ds.stacked_widths(with_labels=True)
+    n = ds.n
+
+    if backend == "norm":
+        def score_block(b: int) -> jax.Array:
+            blk, nvalid = ds.block(b, block_size, with_labels=True)
+            return _norm_score_block(blk, nvalid, float(n))
+        passes = 1
+    else:
+        G = jnp.zeros((ds.T, s, s), jnp.float32)
+        for _, blk, nvalid in ds.blocks(block_size, with_labels=True):
+            G = _gram_step(G, blk, nvalid, use_kernel=use_kernel)
+            probe()
+        M = batched_gram_pinv(G, rcond)
+
+        def score_block(b: int) -> jax.Array:
+            blk, nvalid = ds.block(b, block_size, with_labels=True)
+            return _vrlr_score_block(blk, M, nvalid, float(n),
+                                     use_kernel=use_kernel)
+        passes = 2
+
+    masses = _mass_table(ds, block_size, score_block, probe)
+    return StreamScorer(T=ds.T, n=n, nb=nb, bs=bs, masses=masses,
+                        dis_key=key, score_block=score_block,
+                        data_passes=passes)
+
+
+# --------------------------------------------------------------------------
+# VKMC: subsampled local k-means -> stats block-scan -> blockwise scores
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def _vkmc_stats_step(blk, centers, nvalid, *, use_kernel: bool):
+    """(cluster sizes (T, k), cluster costs (T, k)) of one block — the fused
+    assign-update pass with validity weights, batched over parties."""
+    T, bs, _ = blk.shape
+    wv = jnp.broadcast_to(_row_valid(bs, nvalid), (T, bs))
+    _, _, _, wsum, ccost = kmeans_update(blk, centers, wv, use_kernel=use_kernel)
+    return wsum, ccost
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def _vkmc_score_block(blk, centers, csize, ccost, nvalid, alpha,
+                      *, use_kernel: bool):
+    """Algorithm 3 lines 3-11 for one block, given the GLOBAL per-party
+    cluster sizes/costs from the stats pass; 0 on padded rows."""
+    # kops/kref directly: both batch over the leading party axis (the
+    # inline fallback in sensitivity.kmeans_assignment is 2-D only)
+    if use_kernel:
+        assign, d2 = kops.kmeans_assign(blk, centers)
+    else:
+        assign, d2 = kref.kmeans_assign(blk, centers)
+    cost = jnp.maximum(ccost.sum(axis=1), 1e-30)[:, None]      # (T, 1)
+    cs = jnp.maximum(csize, 1.0)                               # (T, k)
+    cc_a = jnp.take_along_axis(ccost, assign, axis=1)          # (T, bs)
+    cs_a = jnp.take_along_axis(cs, assign, axis=1)
+    sc = alpha * d2 / cost + alpha * cc_a / (cs_a * cost) + 2.0 * alpha / cs_a
+    ok = jnp.arange(blk.shape[1]) < nvalid
+    return jnp.where(ok[None, :], sc, 0.0)
+
+
+@register_stream_scorer("vkmc")
+def vkmc_stream_scorer(
+    key, ds: VFLDataset, block_size: int, backend: str,
+    probe: Optional[Callable[[], None]] = None,
+    k: int = 10, alpha: float = 2.0, local_iters: int = 15,
+    center_sample: int = 16384,
+) -> StreamScorer:
+    """Algorithm 3's sensitivities with only one block resident.
+
+    Party j's local alpha-approximate k-means runs on a uniform row
+    subsample of at most ``center_sample`` rows (O(center_sample * d_j)
+    memory; the subsample's solution is still an alpha'-approximation
+    absorbed by the ``alpha`` knob), then ONE block-scan pass accumulates
+    the global cluster sizes/costs through the fused assign-update kernel,
+    and scores are re-emitted per block from (block, centers, stats).  The
+    key chain (one split per party, one for DIS) matches the materialized
+    ``vkmc`` task, so the same seed drives comparable constructions.
+    """
+    probe = probe or _noop
+    use_kernel = backend == "pallas"
+    nb, bs = ds.block_geometry(block_size)
+    widths, s = ds.stacked_widths(with_labels=False)
+    n, T = ds.n, ds.T
+
+    subs = []
+    for _ in range(T):                     # the materialized task's key chain
+        key, sub = jax.random.split(key)
+        subs.append(sub)
+    key, dis_key = jax.random.split(key)
+
+    if backend == "norm":
+        def score_block(b: int) -> jax.Array:
+            blk, nvalid = ds.block(b, block_size, with_labels=False)
+            return _norm_score_block(blk, nvalid, float(n))
+        masses = _mass_table(ds, block_size, score_block, probe)
+        return StreamScorer(T=T, n=n, nb=nb, bs=bs, masses=masses,
+                            dis_key=dis_key, score_block=score_block,
+                            data_passes=1)
+
+    # local centers from a bounded uniform subsample, padded to width s
+    centers = []
+    for j, sub in enumerate(subs):
+        k_smp, k_km = jax.random.split(sub)
+        if n > center_sample:
+            idx = np.asarray(jax.random.randint(k_smp, (center_sample,), 0, n))
+            Xj = jnp.asarray(ds.parts[j][idx])
+        else:
+            Xj = jnp.asarray(ds.parts[j])
+        c = kmeans(k_km, Xj, k, iters=local_iters, use_kernel=use_kernel)
+        centers.append(jnp.pad(c, ((0, 0), (0, s - widths[j]))))
+    centers = jnp.stack(centers)                               # (T, k, s)
+
+    csize = jnp.zeros((T, k), jnp.float32)
+    ccost = jnp.zeros((T, k), jnp.float32)
+    for _, blk, nvalid in ds.blocks(block_size, with_labels=False):
+        ws, cc = _vkmc_stats_step(blk, centers, nvalid, use_kernel=use_kernel)
+        csize = csize + ws
+        ccost = ccost + cc
+        probe()
+
+    def score_block(b: int) -> jax.Array:
+        blk, nvalid = ds.block(b, block_size, with_labels=False)
+        return _vkmc_score_block(blk, centers, csize, ccost, nvalid,
+                                 float(alpha), use_kernel=use_kernel)
+
+    masses = _mass_table(ds, block_size, score_block, probe)
+    return StreamScorer(T=T, n=n, nb=nb, bs=bs, masses=masses,
+                        dis_key=dis_key, score_block=score_block,
+                        data_passes=3)
+
+
+# --------------------------------------------------------------------------
+# Streamed hierarchical DIS: masses + on-demand block recomputation
+# --------------------------------------------------------------------------
+
+def dis_plan_streamed(
+    scorer: StreamScorer, m: int,
+    probe: Optional[Callable[[], None]] = None,
+) -> DisPlan:
+    """Run the hierarchical sampler against a :class:`StreamScorer` —
+    draw-identical to :func:`repro.core.dis.dis_plan_blocked` on the same
+    scores, but only the *touched* blocks' scores are ever materialized.
+
+    Round 1 samples m (party, block) cells from ``scorer.masses``; round 2
+    recomputes scores for each touched block once and draws the within-block
+    rows (per-cell candidate streams and the cell-ordered union match the
+    in-memory plan exactly); round 3 gathers the sampled rows' combined
+    scores from the same recomputed blocks, accumulated in party order so
+    the weight arithmetic matches the flat plan's scan.
+    """
+    probe = probe or _noop
+    T, nb, bs, n = scorer.T, scorer.nb, scorer.bs, scorer.n
+    cap = int(m)
+    ncells = T * nb
+    subs = _key_chain(scorer.dis_key, ncells + 1)
+    masses = scorer.masses.astype(_float_dtype())
+    G = masses.sum()
+
+    # ---- round 1: cells ~ Multinomial(m, G_jb/G) ----------------------------
+    draws = jax.random.categorical(
+        subs[0], jnp.log(jnp.maximum(masses.reshape(-1), 1e-30)), shape=(cap,)
+    )
+    a_cells = np.bincount(np.asarray(draws), minlength=ncells)
+
+    # ---- rounds 2+3: recompute each touched block ONCE, draw its cells' rows
+    # and gather their combined scores, then DISCARD the block's scores — at
+    # no point is more than one block's score matrix live, so peak memory is
+    # O(bs * T) regardless of how many blocks the m draws touch.
+    occupied = np.flatnonzero(a_cells)
+    touched = sorted({int(c) % nb for c in occupied})
+    per_cell: Dict[int, tuple] = {}
+    for b in touched:
+        sc_b = scorer.score_block(b).astype(_float_dtype())    # (T, bs)
+        # party-ordered combined row scores: gather commutes with the adds,
+        # so g_b[cand] is bitwise the flat plan's per-party gather scan
+        g_b = jnp.zeros((bs,), sc_b.dtype)
+        for j in range(T):
+            g_b = g_b + sc_b[j]
+        row_ok = (b * bs + jnp.arange(bs)) < n
+        for j in range(T):
+            c = j * nb + b
+            if a_cells[c] == 0:
+                continue
+            lg = jnp.where(row_ok, jnp.log(jnp.maximum(sc_b[j], 1e-30)),
+                           -jnp.inf)
+            # full-capacity candidate stream, first a_c taken — the
+            # iid-prefix convention keeping draws identical to the
+            # in-memory plan
+            cand = jax.random.categorical(subs[1 + c], lg, shape=(cap,))
+            cand = cand[: int(a_cells[c])]
+            per_cell[c] = (b * bs + cand, g_b[cand])
+        del sc_b, g_b
+        probe()
+    # server union in cell order — matches the in-memory plan's stable
+    # taken-slots-first selection exactly
+    cells = sorted(per_cell)
+    S = (jnp.concatenate([per_cell[c][0] for c in cells]) if cells
+         else jnp.zeros((0,), jnp.int32))                      # (m,)
+    g_sum = (jnp.concatenate([per_cell[c][1] for c in cells]) if cells
+             else jnp.zeros((0,), masses.dtype))
+    w = G / (m * jnp.maximum(g_sum, 1e-30))
+
+    a = jnp.asarray(a_cells.reshape(T, nb).sum(axis=1), jnp.int32)
+    return DisPlan(S, w, a, masses.sum(axis=1))
+
+
+# --------------------------------------------------------------------------
+# Data-parallel block masses over the mesh (rows over the `data` axis)
+# --------------------------------------------------------------------------
+
+def _stacked_rows(ds: VFLDataset, lo: int, hi: int, widths, s: int) -> np.ndarray:
+    """Host-side (T, hi-lo, s) labeled stacked slice — the layout of
+    ``VFLDataset.stacked(with_labels=True).blocks[:, lo:hi]``, built from
+    the host representation of the parts so only this slice is allocated."""
+    parts = []
+    for j, p in enumerate(ds.parts):
+        seg = np.asarray(p[lo:hi], dtype=np.float32)
+        if j == ds.T - 1:
+            yseg = np.asarray(ds.y[lo:hi], dtype=np.float32)
+            seg = np.concatenate([seg, yseg[:, None]], axis=1)
+        parts.append(np.pad(seg, ((0, 0), (0, s - widths[j]))))
+    return np.stack(parts)
+
+
+def vrlr_block_masses_sharded(
+    mesh, ds: VFLDataset, block_size: int,
+    *, rcond: float = 1e-6, axis: str = "data",
+):
+    """VRLR block-mass table with rows sharded over ``axis``.
+
+    Each device computes its shard's (T, s, s) partial Gram — combined with
+    ONE psum (the mesh analogue of DIS round 1: O(T s^2) scalars, no row
+    data moves) — then scores its own rows and emits its slice of the
+    (T, nb) mass table; a second psum unions the disjoint slices.  This is
+    the selector's psum idiom (:mod:`repro.core.selector`) applied to the
+    streaming sampler's round-1 table: compute scales with the ``data``
+    axis, communication stays the DIS bill.  The sharded design is built
+    per shard straight from the host dataset
+    (``jax.make_array_from_callback``), so per-device memory is
+    O(n/D * d) — the full (T, n, s) array never lands on one device.
+
+    Requires n divisible by the axis size and the per-device shard
+    divisible by ``bs`` (block grid aligned to shards).  Returns the same
+    (T, nb) table as ``vrlr_stream_scorer(...).masses`` up to fp reduction
+    order.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    nb, bs = ds.block_geometry(block_size)
+    T, n = ds.T, ds.n
+    if ds.y is None:
+        raise ValueError("vrlr requires labels at party T")
+    D = mesh.shape[axis]
+    if n % D != 0 or (n // D) % bs != 0:
+        raise ValueError(
+            f"n={n} must shard evenly over {axis}={D} into bs={bs} blocks"
+        )
+    nb_local = (n // D) // bs
+    widths, s = ds.stacked_widths(with_labels=True)
+    sharding = NamedSharding(mesh, P(None, axis, None))
+    blocks = jax.make_array_from_callback(
+        (T, n, s), sharding,
+        lambda idx: _stacked_rows(ds, idx[1].start or 0,
+                                  n if idx[1].stop is None else idx[1].stop,
+                                  widths, s),
+    )
+
+    def _inner(blk):                                           # (T, n/D, s)
+        f = blk.astype(jnp.float32)
+        Gm = jax.lax.psum(jnp.einsum("tns,tnu->tsu", f, f), axis)
+        M = batched_gram_pinv(Gm, rcond)
+        sc = jnp.clip(jnp.einsum("tns,tsr,tnr->tn", f, M, f), 0.0, 1.0) \
+            + 1.0 / n
+        masses_loc = sc.reshape(T, nb_local, bs).sum(axis=2)
+        i = jax.lax.axis_index(axis)
+        full = jnp.zeros((T, nb), masses_loc.dtype)
+        full = jax.lax.dynamic_update_slice(full, masses_loc, (0, i * nb_local))
+        return jax.lax.psum(full, axis)
+
+    fn = shard_map(_inner, mesh=mesh, in_specs=P(None, axis, None),
+                   out_specs=P(), check_rep=False)
+    return fn(blocks)

@@ -40,6 +40,22 @@ class StackedParts(NamedTuple):
         return int(self.blocks.shape[1])
 
 
+def block_geometry(n: int, block_size: int) -> Tuple[int, int]:
+    """(num_blocks nb, rows-per-block bs) for a ``block_size`` row chunking
+    of n rows — the canonical geometry shared by ``VFLDataset.block`` and
+    the hierarchical DIS sampler (``repro.core.dis.blocked_geometry``
+    delegates here, so the two can never drift apart).
+
+    bs clamps to n, so ``block_size >= n`` is exactly one unpadded block —
+    the flat-plan degeneration the bit-identity tests rely on; the last
+    block is zero-padded up to bs.
+    """
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    bs = min(int(block_size), int(n))
+    return -(-int(n) // bs), bs
+
+
 def split_columns(d: int, T: int, sizes: Optional[Sequence[int]] = None) -> List[slice]:
     """Column slices for T parties. ``sizes`` overrides the near-even split."""
     if sizes is None:
@@ -56,7 +72,14 @@ def split_columns(d: int, T: int, sizes: Optional[Sequence[int]] = None) -> List
 
 @dataclasses.dataclass
 class VFLDataset:
-    """X (n, d) vertically partitioned; y optional, held by the last party."""
+    """X (n, d) vertically partitioned; y optional, held by the last party.
+
+    ``parts`` may be jnp arrays (device-resident) or plain numpy arrays.
+    Numpy-backed datasets are the host-resident substrate of the streaming
+    path (:mod:`repro.core.streaming`): :meth:`block` slices on the host and
+    only the requested (T, bs, s) chunk ever becomes a device array, so
+    device memory stays O(block_size * d) at any n.
+    """
 
     parts: List[jnp.ndarray]            # party j's local block (n, d_j)
     y: Optional[jnp.ndarray] = None     # (n,), stored at party T-1
@@ -90,6 +113,16 @@ class VFLDataset:
         inside communication-accounted protocols."""
         return jnp.concatenate(self.parts, axis=1)
 
+    def stacked_widths(self, with_labels: bool = False) -> Tuple[Tuple[int, ...], int]:
+        """(per-party valid widths, common padded width s) of the stacked
+        view — the geometry shared by :meth:`stacked` and :meth:`block`."""
+        if with_labels and self.y is None:
+            raise ValueError("with_labels requires labels at party T")
+        widths = list(self.dims)
+        if with_labels:
+            widths[-1] += 1
+        return tuple(widths), max(widths)
+
     def stacked(self, with_labels: bool = False) -> StackedParts:
         """Padded (T, n, s) stacking of the party blocks for single-dispatch
         scoring (one vmap over the party axis instead of a Python loop).
@@ -99,17 +132,13 @@ class VFLDataset:
         common width s grows accordingly.  Each party only ever touches its
         own slice, so the view is a layout change, not a protocol change.
         """
-        if with_labels and self.y is None:
-            raise ValueError("with_labels requires labels at party T")
-        widths = list(self.dims)
-        if with_labels:
-            widths[-1] += 1
-        s = max(widths)
+        widths, s = self.stacked_widths(with_labels)
         blocks, mask = [], []
         for j, p in enumerate(self.parts):
-            b = p
+            b = jnp.asarray(p)
             if with_labels and j == self.T - 1:
-                b = jnp.concatenate([b, self.y[:, None].astype(b.dtype)], axis=1)
+                b = jnp.concatenate([b, jnp.asarray(self.y)[:, None].astype(b.dtype)],
+                                    axis=1)
             pad = s - widths[j]
             if pad:
                 b = jnp.pad(b, ((0, 0), (0, pad)))
@@ -117,6 +146,51 @@ class VFLDataset:
             mask.append(np.arange(s) < widths[j])
         return StackedParts(jnp.stack(blocks), jnp.asarray(np.stack(mask)),
                             tuple(widths))
+
+    # -- chunked row-block view (the streaming substrate) ---------------------
+
+    def block_geometry(self, block_size: int) -> Tuple[int, int]:
+        """:func:`block_geometry` of this dataset's n rows."""
+        return block_geometry(self.n, block_size)
+
+    def block(
+        self, b: int, block_size: int, with_labels: bool = False
+    ) -> Tuple[jnp.ndarray, int]:
+        """Padded (T, bs, s) stacked view of row block ``b`` + its valid-row
+        count.
+
+        Rows [b*bs, b*bs + bs) of every party, laid out exactly as the
+        corresponding slice of :meth:`stacked` (labels appended to party T,
+        columns zero-padded to the common width); rows past n are zero.
+        Slicing happens on the host representation of ``parts`` (numpy or
+        jnp), so with numpy-backed parts only this one block is ever
+        transferred to the device.
+        """
+        widths, s = self.stacked_widths(with_labels)
+        nb, bs = self.block_geometry(block_size)
+        if not 0 <= b < nb:
+            raise IndexError(f"block {b} out of range [0, {nb})")
+        lo = b * bs
+        hi = min(lo + bs, self.n)
+        nvalid = hi - lo
+        blocks = []
+        for j, p in enumerate(self.parts):
+            seg = jnp.asarray(p[lo:hi])
+            if with_labels and j == self.T - 1:
+                seg = jnp.concatenate(
+                    [seg, jnp.asarray(self.y[lo:hi])[:, None].astype(seg.dtype)],
+                    axis=1)
+            seg = jnp.pad(seg, ((0, bs - nvalid), (0, s - widths[j])))
+            blocks.append(seg)
+        return jnp.stack(blocks), nvalid
+
+    def blocks(self, block_size: int, with_labels: bool = False):
+        """Iterate ``(b, block (T, bs, s), nvalid)`` over the row chunking —
+        the one-block-resident traversal the streaming scorers consume."""
+        nb, _ = self.block_geometry(block_size)
+        for b in range(nb):
+            blk, nvalid = self.block(b, block_size, with_labels)
+            yield b, blk, nvalid
 
     def rows(self, idx: jnp.ndarray) -> "VFLDataset":
         y = None if self.y is None else self.y[idx]

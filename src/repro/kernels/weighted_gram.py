@@ -44,7 +44,18 @@ def weighted_gram(
     block_n: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    """X: (n, d); w: (n,) -> (d, d) float32 = X^T diag(w) X."""
+    """X: (n, d); w: (n,) -> (d, d) float32 = X^T diag(w) X.
+
+    Leading batch dimensions (X (..., n, d), w (..., n)) fold into the grid
+    via the native pallas_call batching rule — the streaming Gram block-scan
+    uses this with both operands batched over the party axis.
+    """
+    if X.ndim > 2 or w.ndim > 1:
+        return jax.vmap(
+            lambda x, ww: weighted_gram(x, ww, block_n=block_n,
+                                        interpret=interpret),
+            in_axes=(0 if X.ndim > 2 else None, 0 if w.ndim > 1 else None),
+        )(X, w)
     n, d = X.shape
     d_pad = _round_up(max(d, 1), 128)
     bn = min(block_n, _round_up(n, 8))

@@ -154,6 +154,55 @@ def test_kernels_vmap_safe_in_interpret_mode(B, n, k, d, seed):
                                        rtol=1e-5, atol=1e-5)
 
 
+@given(st.integers(2, 300), st.integers(1, 4), st.integers(1, 350),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_blocked_marginals_match_flat_for_random_partitions(n, T, block_size, seed):
+    """Hierarchical DIS correctness: for ANY block partition the induced
+    marginal of dis_plan_blocked telescopes to exactly the flat dis_marginals
+    (float64, unsimplified cell-sum vs the direct g/G)."""
+    from repro.core.dis import dis_blocked_marginals
+
+    key = jax.random.PRNGKey(seed)
+    scores = [jax.random.uniform(jax.random.fold_in(key, j), (n,)) + 1e-3
+              for j in range(T)]
+    mb = dis_blocked_marginals(scores, block_size)
+    g64 = np.stack([np.asarray(g, np.float64) for g in scores]).sum(axis=0)
+    np.testing.assert_allclose(mb, g64 / g64.sum(), rtol=1e-12)
+    np.testing.assert_allclose(mb, np.asarray(dis_marginals(scores)), rtol=1e-5)
+
+
+@given(st.integers(10, 200), st.integers(1, 3), st.integers(1, 40),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_blocked_plan_reduces_to_full_and_keeps_invariants(n, T, m, seed):
+    """block_size >= n is bit-identical to the flat plan; a random smaller
+    block size keeps the protocol invariants (index range, positive weights,
+    counts summing to m, weight identity w*m*g = G)."""
+    from repro.core.dis import dis_plan_blocked, dis_plan_full
+
+    key = jax.random.PRNGKey(seed)
+    scores = jnp.stack(
+        [jax.random.uniform(jax.random.fold_in(key, j), (n,)) + 1e-3
+         for j in range(T)])
+    pkey = jax.random.fold_in(key, 99)
+    pf = dis_plan_full(pkey, scores, m)
+    pb = dis_plan_blocked(pkey, scores, m, block_size=n)
+    np.testing.assert_array_equal(np.asarray(pf.indices), np.asarray(pb.indices))
+    np.testing.assert_array_equal(np.asarray(pf.weights), np.asarray(pb.weights))
+    np.testing.assert_array_equal(np.asarray(pf.counts), np.asarray(pb.counts))
+
+    bsz = max(1, n // max(1, (seed % 7) + 1) - 3)
+    ps = dis_plan_blocked(pkey, scores, m, block_size=bsz)
+    assert bool(jnp.all((ps.indices >= 0) & (ps.indices < n)))
+    assert bool(jnp.all(ps.weights > 0))
+    assert int(ps.counts.sum()) == m
+    g = np.asarray(scores.sum(axis=0))
+    np.testing.assert_allclose(
+        np.asarray(ps.weights) * m * g[np.asarray(ps.indices)],
+        float(np.asarray(scores).sum()), rtol=1e-3)
+
+
 @given(st.integers(4, 64), st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
 @settings(max_examples=10, deadline=None)
 def test_dis_estimator_positive_combination(n, T, seed):

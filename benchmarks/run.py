@@ -21,8 +21,11 @@ import time
 # The paper benchmarks measure LOSS and COMMUNICATION, not kernel wall time;
 # on this CPU container the Pallas kernels run in interpret mode (~20x slower
 # than compiled jnp, semantically identical — tests/test_kernels.py proves
-# it), so route the hot loops to the jnp references. kernel_micro bypasses
-# this and times the kernels explicitly.
+# it), so route the hot loops to the jnp references.  kernel_micro and
+# fused_lloyd resolve the execution mode themselves via
+# repro.core.api.resolve_backend: compiled-kernel timings on TPU/GPU,
+# jnp-ref (+ structural census) on CPU — interpret-mode wall numbers are
+# only recorded behind their explicit --interpret flag, clearly labeled.
 os.environ.setdefault("REPRO_NO_PALLAS", "1")
 
 MODULES = [

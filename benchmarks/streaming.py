@@ -3,18 +3,32 @@
 The materialized pipeline puts the full (T, n, s) stacked design and the
 (T, n) score matrix on device; the streaming pipeline
 (``build_coreset_streaming``) keeps the dataset host-resident (numpy-backed
-``VFLDataset``) and holds ONE (T, bs, s) block at a time, so peak live
-device bytes are O(block_size * d) while the materialized path's are
+``VFLDataset``) and holds ONE (T, bs, s) block at a time — or, pipelined,
+one double-buffered (C, T, bs, s) superchunk — so peak live device bytes
+are O(chunk_blocks * block_size * d) while the materialized path's are
 O(n * d).  Both are *measured*, not asserted: the dataset is generated in
-host numpy, and a ``jax.live_arrays()`` census runs after every block step
+host numpy, and a ``jax.live_arrays()`` census (deduped by underlying
+buffer, so aliased/donated slots count once) runs after every chunk step
 (the ``probe`` hook) and around the materialized build — the streamed
 analogue of ``fused_lloyd``'s structural passes-over-X check.
 
-Rows land in BENCH_kernels.json under the ``streaming`` section:
-``{path, n, d, T, m, block_size, rows_per_s, peak_live_bytes, data_passes}``.
-In ``--fast`` mode n = 50k (the CI smoke cap); ``--full`` runs n = 10^6,
-where the streamed peak stays flat across n while the materialized peak
-scales with it.
+Rows land in BENCH_kernels.json under two sections:
+
+* ``streaming`` — the block-at-a-time engine (PR 3's dispatch granularity,
+  kept as the draw-identity oracle): ``{path, n, d, T, m, block_size,
+  rows_per_s, peak_live_bytes, data_passes}``.
+* ``streaming_pipelined`` — the pipelined engine (double-buffered prefetch
+  + scan-fused superchunks + grouped one-dispatch redraw) over a
+  block_size x chunk_blocks sweep plus a prefetch on/off ablation; each
+  entry also records ``chunk_bytes`` (the C-block superchunk yardstick the
+  peak is judged against) and ``speedup_vs_streaming`` against the
+  same-block-size ``streaming`` row from the SAME run/backend.
+
+Every pipelined construction is asserted draw-identical to the
+block-at-a-time one for the same key before its row is recorded — the
+benchmark doubles as the end-to-end identity smoke (CI runs it in
+``--fast`` mode at the n = 50k cap).  ``--full`` runs n = 10^6, the regime
+the materialized path cannot enter on a fixed device budget.
 """
 
 from __future__ import annotations
@@ -30,12 +44,24 @@ from benchmarks.common import write_bench_json, write_rows
 from repro.core import CommLedger, VFLDataset, build_coreset, build_coreset_streaming
 
 BENCH = "streaming"
+BENCH_PIPE = "streaming_pipelined"
 
 
 def live_bytes() -> int:
-    """Total bytes of live device arrays right now."""
-    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
-               for a in jax.live_arrays())
+    """Total bytes of live device arrays right now, deduped by underlying
+    buffer so donated/aliased views (e.g. the prefetcher's staging slots)
+    are counted once, not per jax.Array object."""
+    seen, total = set(), 0
+    for a in jax.live_arrays():
+        try:
+            key = a.unsafe_buffer_pointer()
+        except Exception:
+            key = id(a)
+        if key in seen:
+            continue
+        seen.add(key)
+        total += int(np.prod(a.shape)) * a.dtype.itemsize
+    return total
 
 
 def _host_dataset(n: int, d: int, T: int):
@@ -63,12 +89,14 @@ class _Peak:
         self.peak = max(self.peak, live_bytes())
 
 
-def _run_streaming(ds, m: int, block_size: int):
+def _run_streaming(ds, m: int, block_size: int, chunk_blocks: int = 1,
+                   prefetch: bool = False):
     peak = _Peak()
     led = CommLedger()
     t0 = time.time()
     cs = build_coreset_streaming("vrlr", ds, m, key=jax.random.PRNGKey(0),
                                  backend="ref", block_size=block_size,
+                                 chunk_blocks=chunk_blocks, prefetch=prefetch,
                                  ledger=led, probe=peak)
     jax.block_until_ready(cs.weights)
     wall = time.time() - t0
@@ -91,16 +119,36 @@ def _run_materialized(ds_host, m: int):
     return cs, wall, peak, led.total
 
 
+def _assert_draw_identical(cs_ref, cs_new, label: str):
+    """The pipelined engine must reproduce the block-at-a-time draws
+    exactly — this makes the benchmark double as the identity smoke."""
+    if not (np.array_equal(np.asarray(cs_ref.indices), np.asarray(cs_new.indices))
+            and np.array_equal(np.asarray(cs_ref.weights),
+                               np.asarray(cs_new.weights))):
+        raise AssertionError(
+            f"pipelined draws diverged from the streamed oracle at {label}"
+        )
+
+
 def run(fast: bool = True):
     n = 50_000 if fast else 1_000_000
     d, T, m = 30, 3, 512
     block_sizes = [4096, 16384, 65536]
+    chunk_sweeps = [4, 16]
     ds_host = _host_dataset(n, d, T)
 
-    rows, entries = [], []
+    rows, entries, pipe_entries = [], [], []
+    base_rows_per_s = {}                    # block_size -> streaming rows/s
 
-    def record(path, wall, peak, comm, block_size=None, passes=None):
+    def block_bytes(bsz: int) -> int:
+        # the O(block_size * d) yardstick: one labeled (T, bs, s) block
+        return int(T * bsz * (d // T + 1) * 4)
+
+    def record(path, wall, peak, comm, block_size=None, passes=None,
+               chunk_blocks=None, prefetch=None):
         label = path if block_size is None else f"{path}-b{block_size}"
+        if chunk_blocks is not None:
+            label += f"-c{chunk_blocks}" + ("" if prefetch else "-noprefetch")
         rows.append({"bench": BENCH, "method": label, "size": n,
                      "cost_mean": round(peak / 1e6, 3), "cost_std": 0.0,
                      "comm": comm, "wall_s": round(wall, 4)})
@@ -109,26 +157,73 @@ def run(fast: bool = True):
                  "peak_live_bytes": int(peak)}
         if block_size is not None:
             entry["block_size"] = block_size
-            # the O(block_size * d) yardstick the peak is judged against:
-            # one labeled (T, bs, s) block + the (T, s, s)/(T, nb) state
-            entry["block_bytes"] = int(T * block_size * (d // T + 1) * 4)
+            entry["block_bytes"] = block_bytes(block_size)
         if passes is not None:
             entry["data_passes"] = passes
-        entries.append(entry)
+        if chunk_blocks is None:
+            entries.append(entry)
+        else:
+            entry["chunk_blocks"] = chunk_blocks
+            entry["prefetch"] = bool(prefetch)
+            # the superchunk yardstick: peak should stay within ~2.5x of it
+            # (two double-buffered slots + one live compute residency);
+            # chunk_blocks clamps to the block count, so the yardstick does too
+            eff_chunk = min(chunk_blocks, -(-n // block_size))
+            entry["chunk_bytes"] = eff_chunk * block_bytes(block_size)
+            base = base_rows_per_s.get(block_size)
+            if base:
+                entry["speedup_vs_streaming"] = round(
+                    entry["rows_per_s"] / base, 2)
+            pipe_entries.append(entry)
+        return entry
 
     # materialized reference (device-resident flat pipeline)
     _, wall, peak, comm = _run_materialized(ds_host, m)
     record("materialized", wall, peak, comm)
 
-    # streaming at a block-size sweep (vrlr ref = 2 full passes: Gram + masses)
+    # block-at-a-time streaming sweep (vrlr ref = 2 full passes: Gram+masses)
+    ref_cs = {}
     for bsz in block_sizes:
         if bsz >= n:
             continue
         cs, wall, peak, comm = _run_streaming(ds_host, m, bsz)
-        record("streaming", wall, peak, comm, block_size=bsz, passes=2)
+        entry = record("streaming", wall, peak, comm, block_size=bsz, passes=2)
+        base_rows_per_s[bsz] = entry["rows_per_s"]
+        ref_cs[bsz] = cs
+
+    # pipelined engine: block_size x chunk_blocks sweep, all draw-checked.
+    # Each config runs twice — the first (cold) wall includes the one-time
+    # jit compiles of the superchunk scan/redraw programs, the second (warm)
+    # is the steady-state the engine sustains (the time_us warmup
+    # convention); rows_per_s reports warm, rows_per_s_cold keeps the cold
+    # number honest.
+    def pipelined(bsz, C, prefetch):
+        cs, wall_cold, peak, comm = _run_streaming(
+            ds_host, m, bsz, chunk_blocks=C, prefetch=prefetch)
+        tag = f"b{bsz}-c{C}" + ("" if prefetch else "-noprefetch")
+        _assert_draw_identical(ref_cs[bsz], cs, tag)
+        cs, wall, peak2, comm = _run_streaming(
+            ds_host, m, bsz, chunk_blocks=C, prefetch=prefetch)
+        _assert_draw_identical(ref_cs[bsz], cs, tag + "-warm")
+        entry = record("pipelined", wall, max(peak, peak2), comm,
+                       block_size=bsz, passes=2, chunk_blocks=C,
+                       prefetch=prefetch)
+        entry["rows_per_s_cold"] = round(n / max(wall_cold, 1e-9), 1)
+
+    for bsz in block_sizes:
+        if bsz >= n:
+            continue
+        for C in chunk_sweeps:
+            pipelined(bsz, C, prefetch=True)
+
+    # prefetch ablation at the smallest block size (dispatch-bound regime)
+    bsz = block_sizes[0]
+    if bsz < n:
+        pipelined(bsz, chunk_sweeps[-1], prefetch=False)
 
     write_rows(BENCH, rows)
     write_bench_json(BENCH, entries)
+    write_bench_json(BENCH_PIPE, pipe_entries)
     return rows
 
 

@@ -11,7 +11,8 @@ Public API:
   dis_sample, uniform_sample, dis_marginals,
   dis_blocked_marginals, blocked_geometry                 (dis — Algorithm 1)
   StreamScorer, make_stream_scorer, dis_plan_streamed,
-  vrlr_block_masses_sharded                               (streaming — block-scan n)
+  dis_plan_streamed_batched, vkmc_local_centers,
+  vrlr_block_masses_sharded, vkmc_block_masses_sharded    (streaming — block-scan n)
   vrlr_local_scores, vkmc_local_scores, ...               (sensitivity — Alg 2/3 local)
   Coreset, vrlr_coreset_ratio, vkmc_coreset_ratio         (coreset)
   ridge_closed_form, fista, saga_ridge, solve             (vrlr solvers)
@@ -57,8 +58,11 @@ from repro.core.dis import (
 from repro.core.streaming import (
     StreamScorer,
     dis_plan_streamed,
+    dis_plan_streamed_batched,
     make_stream_scorer,
     register_stream_scorer,
+    vkmc_block_masses_sharded,
+    vkmc_local_centers,
     vrlr_block_masses_sharded,
 )
 from repro.core.sensitivity import (

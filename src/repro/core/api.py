@@ -318,6 +318,12 @@ def build_coreset_jit(
 # Streaming construction: block-scan scoring + hierarchical DIS
 # --------------------------------------------------------------------------
 
+# superchunk width when chunk_blocks is not given: deep enough to amortise
+# the per-dispatch overhead, shallow enough that two prefetch slots + one
+# resident superchunk stay a small multiple of the single-block footprint
+DEFAULT_CHUNK_BLOCKS = 8
+
+
 def build_coreset_streaming(
     task: Union[str, CoresetTask],
     ds: VFLDataset,
@@ -325,6 +331,8 @@ def build_coreset_streaming(
     *,
     key: jax.Array,
     block_size: int = 65536,
+    chunk_blocks: Optional[int] = None,
+    prefetch: Optional[bool] = None,
     backend: str = "auto",
     ledger: Optional[CommLedger] = None,
     probe: Optional[Callable[[], None]] = None,
@@ -332,25 +340,65 @@ def build_coreset_streaming(
 ) -> Coreset:
     """Build one coreset with n as a STREAMING dimension: block-scan scoring
     plus the hierarchical (party, block)-cell DIS sampler, so peak device
-    memory is O(block_size * d) — the (T, n) score matrix and the (n, d)
-    design are never materialized (pass a numpy-backed ``VFLDataset`` to
-    keep the raw data off-device too).
+    memory is O(chunk_blocks * block_size * d) — the (T, n) score matrix and
+    the (n, d) design are never materialized (pass a numpy-backed
+    ``VFLDataset`` to keep the raw data off-device too).
+
+    ``chunk_blocks`` (default :data:`DEFAULT_CHUNK_BLOCKS`, clamped to the
+    number of blocks) sets the PIPELINED dispatch granularity: scoring
+    passes consume double-buffered (chunk_blocks, T, bs, s) superchunks and
+    run the per-block step as a ``lax.scan`` in one dispatch per superchunk,
+    and the touched-block redraw scores + draws one superchunk-sized group
+    per dispatch; ``prefetch`` issues the async staging of the next
+    superchunk while the current one computes.  Its default is
+    backend-aware: on CPU the zero-copy staging already overlaps with the
+    async dispatch of the current chunk's compute, so eager prefetch only
+    adds a live slot (the BENCH ablation measures it strictly slower) and
+    the default is off; on TPU/GPU the extra in-flight H2D transfer is the
+    point and the default is on.  ``chunk_blocks=1`` with
+    ``prefetch=False`` selects the strictly block-at-a-time engine — the
+    same draws, one dispatch per block (the draw-identity oracle pinned by
+    ``tests/test_streaming_pipelined.py``).  Both knobs are validated
+    host-side: a non-positive (or non-integral) value raises ``ValueError``
+    before any work happens; values above the block count are clamped, so
+    ``chunk_blocks >= nb`` means one superchunk spanning the whole dataset.
 
     The sampled marginal is exactly the flat plan's g_i/G (the two-level
     sampling telescopes — see :func:`repro.core.dis.dis_plan_blocked`), and
     with ``block_size >= ds.n`` the draws coincide with
     :func:`build_coreset` bit for bit when the blockwise scores do (e.g.
     the row-local ``norm`` backend).  ``probe`` (if given) is invoked once
-    per block step — instrumentation hook for the memory benchmark.
+    per superchunk step — instrumentation hook for the memory benchmark.
     The communication bill is unchanged: blocking is server-side
     bookkeeping; parties still ship one scalar mass per round-1 row
     (aggregated per party), m indices, and m score shares.
     """
-    from repro.core.streaming import dis_plan_streamed, make_stream_scorer
+    from repro.core.streaming import (
+        dis_plan_streamed,
+        dis_plan_streamed_batched,
+        make_stream_scorer,
+    )
+    from repro.core.vfl import block_geometry
 
     spec = get_task(task)
     backend = resolve_backend(backend)
     m = int(budget)
+    # host-side knob validation (the budget-validation pattern of
+    # build_coresets_batched): fail loudly before any pass is dispatched
+    if not isinstance(block_size, (int, np.integer)) or block_size < 1:
+        raise ValueError(
+            f"block_size must be a positive int, got {block_size!r}"
+        )
+    nb, _ = block_geometry(ds.n, int(block_size))
+    if chunk_blocks is None:
+        chunk_blocks = DEFAULT_CHUNK_BLOCKS
+    if not isinstance(chunk_blocks, (int, np.integer)) or chunk_blocks < 1:
+        raise ValueError(
+            f"chunk_blocks must be a positive int, got {chunk_blocks!r}"
+        )
+    chunk_blocks = min(int(chunk_blocks), nb)      # > nb: one full-span chunk
+    if prefetch is None:
+        prefetch = jax.default_backend() in ("tpu", "gpu")
     if spec.needs_labels and ds.y is None:
         raise ValueError(f"{spec.name} requires labels at party T")
     if spec.score_fn is None:
@@ -359,11 +407,15 @@ def build_coreset_streaming(
         schedule.record(ledger)
         return Coreset(S, w, schedule.total)
 
-    scorer = make_stream_scorer(spec.name, key, ds, block_size, backend,
-                                probe=probe, **params)
+    scorer = make_stream_scorer(spec.name, key, ds, int(block_size), backend,
+                                probe=probe, chunk_blocks=chunk_blocks,
+                                prefetch=prefetch, **params)
     if not bool(scorer.masses.sum() > 0):
         raise ValueError("DIS requires a positive total score")
-    plan = dis_plan_streamed(scorer, m, probe=probe)
+    if chunk_blocks == 1 and not prefetch:
+        plan = dis_plan_streamed(scorer, m, probe=probe)
+    else:
+        plan = dis_plan_streamed_batched(scorer, m, probe=probe)
     schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
     schedule.record(ledger)
     return Coreset(plan.indices, plan.weights, schedule.total)

@@ -46,6 +46,11 @@ import numpy as np
 
 from repro.core.comm import CommLedger, CommSchedule
 
+try:  # the head-draw replay reaches for the threefry primitive directly
+    from jax._src.prng import threefry2x32_p as _threefry2x32_p
+except ImportError:  # pragma: no cover - jax moved the internal; fall back
+    _threefry2x32_p = None
+
 
 def _float_dtype() -> jnp.dtype:
     return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
@@ -65,6 +70,58 @@ def _key_chain(key: jax.Array, num: int) -> jax.Array:
 
     _, subs = jax.lax.scan(body, key, None, length=num)
     return subs
+
+
+def _categorical_head(key_data, lg, cap: int, take: int):
+    """The first ``take`` entries of ``jax.random.categorical(key, lg,
+    shape=(cap,))`` WITHOUT materializing the (cap, bs) gumbel tensor.
+
+    Every DIS round-2 sampler in this codebase follows the full-capacity
+    candidate-stream convention — draw ``cap`` iid candidates per cell, use
+    the first a_c — because static shapes demand it inside jit/vmap.  The
+    full draw's uniform bits come from ``threefry_2x32(key, iota(cap*bs))``,
+    which pairs counter p with counter p + cap*bs/2 and keeps lane 1 for
+    flat positions below the midpoint — so rows [0, take) (flat positions
+    [0, take*bs), all below the midpoint when take <= cap//2) are
+    reproducible bit for bit from exactly those counter pairs.  The float
+    conversion replays ``jax.random._uniform``'s mantissa trick and
+    ``gumbel``'s double-log verbatim.  This is what makes the convention
+    affordable at streaming scale: a cell that uses a_c of its cap
+    candidates only ever *computes* max(a_c) rows
+    (:func:`repro.core.streaming.dis_plan_streamed_batched`).
+    """
+    bs = lg.shape[-1]
+    half = (cap * bs) // 2
+    x1 = jax.lax.iota(jnp.uint32, take * bs)
+    x2 = x1 + jnp.uint32(half)
+    bits, _ = _threefry2x32_p.bind(key_data[0], key_data[1], x1, x2)
+    float_bits = jax.lax.bitwise_or(
+        jax.lax.shift_right_logical(bits, np.uint32(9)),
+        np.array(1.0, np.float32).view(np.uint32))
+    floats = (jax.lax.bitcast_convert_type(float_bits, jnp.float32)
+              - np.float32(1.0))
+    tiny = np.float32(np.finfo(np.float32).tiny)
+    u = jax.lax.max(tiny, floats * (np.float32(1.0) - tiny) + tiny)
+    g = -jnp.log(-jnp.log(u)).reshape(take, bs)
+    return jnp.argmax(g + lg[None, :], axis=-1)
+
+
+def _head_draws_ok(subs, cap: int, bs: int, take: int) -> bool:
+    """True when :func:`_categorical_head` provably replays the full draw:
+    float32 sampling dtype, even counter stream, head strictly inside the
+    first threefry lane, and non-partitionable threefry keys (the layouts
+    the replay assumes).  Anything else falls back to the full-capacity
+    draw — still one dispatch per group, just cap rows instead of take."""
+    if _threefry2x32_p is None or _float_dtype() != jnp.float32:
+        return False
+    if cap <= 0 or take > cap // 2 or (cap * bs) % 2:
+        return False
+    if getattr(jax.config, "jax_threefry_partitionable", False):
+        return False
+    if jnp.issubdtype(subs.dtype, jax.dtypes.prng_key):
+        return "threefry" in str(jax.random.key_impl(subs)).lower()
+    return getattr(jax.config, "jax_default_prng_impl",
+                   "threefry2x32") == "threefry2x32"
 
 
 class DisPlan(NamedTuple):

@@ -10,8 +10,9 @@ geometry (model axis = party axis) lives in :mod:`repro.core.selector`.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, NamedTuple, Optional, Sequence, Tuple
+from typing import Iterator, List, NamedTuple, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -191,6 +192,119 @@ class VFLDataset:
         for b in range(nb):
             blk, nvalid = self.block(b, block_size, with_labels)
             yield b, blk, nvalid
+
+    # -- pipelined superchunk view (the prefetched streaming substrate) -------
+
+    def _staging_dtype(self, with_labels: bool) -> np.dtype:
+        """Canonical dtype of the stacked device blocks (what :meth:`block`
+        yields after jnp's dtype canonicalization) — the staging buffers must
+        match it so the superchunk path sees the exact same values."""
+        arrs = [p[0:0] for p in self.parts]
+        if with_labels:
+            arrs.append(self.y[0:0])
+        dt = np.result_type(*[np.asarray(a).dtype for a in arrs])
+        return np.dtype(jax.dtypes.canonicalize_dtype(dt))
+
+    def _fill_superchunk(
+        self, out: np.ndarray, b0: int, block_size: int, with_labels: bool,
+        widths: Tuple[int, ...], bs: int, nb: int,
+    ) -> np.ndarray:
+        """Host-side assembly of blocks [b0, b0 + C) into the (C, T, bs, s)
+        numpy staging buffer ``out`` (zeroed first; blocks past nb stay
+        all-zero with 0 valid rows).  One contiguous host slice per party per
+        superchunk — no device dispatches happen here at all; the single
+        ``device_put`` of ``out`` is the only transfer.  Returns the (C,)
+        per-block valid-row counts."""
+        C = out.shape[0]
+        out[...] = 0.0
+        count = max(0, min(C, nb - b0))
+        lo = b0 * bs
+        hi = min(lo + count * bs, self.n)
+        nvalids = np.clip(self.n - (b0 + np.arange(C)) * bs, 0, bs)
+        nvalids[count:] = 0
+        for j, p in enumerate(self.parts):
+            seg = np.asarray(p[lo:hi])
+            if with_labels and j == self.T - 1:
+                yseg = np.asarray(self.y[lo:hi])
+                seg = np.concatenate([seg, yseg[:, None].astype(seg.dtype)],
+                                     axis=1)
+            w = widths[j]
+            for i in range(count):
+                r0 = i * bs
+                nv = int(nvalids[i])
+                out[i, j, :nv, :w] = seg[r0:r0 + nv]
+        return nvalids
+
+    def blocks_prefetched(
+        self, block_size: int, with_labels: bool = False,
+        chunk_blocks: int = 1, prefetch: bool = True,
+    ) -> Iterator[Tuple[int, jnp.ndarray, np.ndarray]]:
+        """Iterate ``(b0, chunk (C, T, bs, s) device array, nvalids (C,))``
+        over superchunks of ``chunk_blocks`` row blocks — the double-buffered
+        staging layer of the pipelined streaming engine.
+
+        With ``prefetch=True`` the async ``jax.device_put`` of superchunk
+        c+1 is issued BEFORE superchunk c is yielded, so the staging of the
+        next chunk overlaps with whatever the consumer computes on the
+        current one.  Each superchunk gets a FRESH staging buffer that the
+        device array aliases (CPU ``device_put`` is zero-copy: the staging
+        buffer IS the device buffer, so assembly writes double as the
+        transfer and nothing is ever copied twice; on an accelerator it
+        becomes a real async H2D copy of an immutable source — safe either
+        way because a staged buffer is never written again).  The consumed
+        chunk's reference is dropped as soon as the next one is yielded, so
+        at most two slots are live regardless of n.  Block contents and
+        ordering are identical to :meth:`blocks`; only the transfer
+        granularity and overlap change.
+        """
+        widths, s = self.stacked_widths(with_labels)
+        nb, bs = self.block_geometry(block_size)
+        if chunk_blocks < 1:
+            raise ValueError(f"chunk_blocks must be >= 1, got {chunk_blocks}")
+        nchunks = -(-nb // chunk_blocks)
+        dt = self._staging_dtype(with_labels)
+
+        def stage(c: int):
+            buf = np.empty((chunk_blocks, self.T, bs, s), dt)
+            nvalids = self._fill_superchunk(buf, c * chunk_blocks, block_size,
+                                            with_labels, widths, bs, nb)
+            return jax.device_put(buf), nvalids          # async: returns now
+
+        if not prefetch:
+            for c in range(nchunks):
+                dev, nvalids = stage(c)
+                yield c * chunk_blocks, dev, nvalids
+                del dev                       # drop the slot before restaging
+            return
+        nxt = stage(0)
+        for c in range(nchunks):
+            cur = nxt
+            # issue the NEXT transfer before handing the current chunk to the
+            # consumer — the copy proceeds while the consumer's dispatch runs
+            nxt = stage(c + 1) if c + 1 < nchunks else None
+            yield c * chunk_blocks, cur[0], cur[1]
+            del cur
+
+    def gather_blocks(
+        self, block_ids, block_size: int, with_labels: bool = False,
+    ) -> Tuple[jnp.ndarray, np.ndarray]:
+        """One (len(ids), T, bs, s) device batch of arbitrary row blocks plus
+        their valid-row counts — the gather feeding the one-dispatch
+        touched-block redraw (scores for ALL touched cells from a single
+        vmapped dispatch instead of one per block)."""
+        widths, s = self.stacked_widths(with_labels)
+        nb, bs = self.block_geometry(block_size)
+        ids = [int(b) for b in block_ids]
+        for b in ids:
+            if not 0 <= b < nb:
+                raise IndexError(f"block {b} out of range [0, {nb})")
+        out = np.empty((len(ids), self.T, bs, s),
+                       self._staging_dtype(with_labels))
+        nvalids = np.zeros((len(ids),), np.int64)
+        for i, b in enumerate(ids):
+            nvalids[i:i + 1] = self._fill_superchunk(
+                out[i:i + 1], b, block_size, with_labels, widths, bs, nb)
+        return jax.device_put(out), nvalids
 
     def rows(self, idx: jnp.ndarray) -> "VFLDataset":
         y = None if self.y is None else self.y[idx]

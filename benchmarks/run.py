@@ -38,6 +38,7 @@ MODULES = [
     "kernel_micro",     # Pallas kernel us/call
     "fused_lloyd",      # fused vs seed Lloyd step: passes-over-X + us/step
     "streaming",        # streaming vs materialized: rows/sec + peak bytes
+    "e2e",              # spec-build + downstream fit: wall time + rel error
     "selector_step",    # beyond-paper: LLM coreset batch selection
     "assumption_sweep",  # beyond-paper: Assumption 4.1/5.1 violation sweep
 ]

@@ -2,6 +2,11 @@
 Table 1 on one synthetic YearPrediction-profile dataset, with per-round
 communication bills printed from the ledger.
 
+All coreset construction goes through ONE declarative surface —
+``CoresetSpec`` compiled and dispatched by ``CoresetPipeline`` — and the
+downstream ridge solve + full-data relative error come from the
+``fit_ridge``/``evaluate`` layer (Theorem 4.1's composition).
+
   PYTHONPATH=src python examples/vfl_regression.py
 """
 
@@ -12,9 +17,12 @@ import jax
 
 from repro.core import (
     CommLedger,
+    CoresetPipeline,
+    CoresetSpec,
     VFLDataset,
-    build_coreset,
     central_comm_cost,
+    evaluate,
+    fit_ridge,
     ridge_closed_form,
     ridge_cost,
     saga_ridge,
@@ -28,6 +36,7 @@ def main() -> None:
     y = y - y.mean()
     ds = VFLDataset.from_dense(X, y, T=3)
     n, lam, m = ds.n, 0.1 * ds.n, 2000
+    pipeline = CoresetPipeline(ds)
 
     def report(name, theta, led):
         c = float(ridge_cost(ds.full(), ds.y, theta, lam)) / n
@@ -35,7 +44,8 @@ def main() -> None:
 
     led = CommLedger()
     central_comm_cost(n, ds.dims, led)
-    report("CENTRAL", ridge_closed_form(ds.full(), ds.y, lam), led)
+    theta_full = ridge_closed_form(ds.full(), ds.y, lam)
+    report("CENTRAL", theta_full, led)
 
     led = CommLedger()
     theta = saga_ridge(jax.random.fold_in(key, 1), ds.full(), ds.y, lam,
@@ -44,12 +54,14 @@ def main() -> None:
 
     for name, task in (("C-CENTRAL", "vrlr"), ("U-CENTRAL", "uniform")):
         led = CommLedger()
-        cs = build_coreset(task, ds, m, key=jax.random.fold_in(key, 2),
-                           ledger=led)
-        XS, yS, w = cs.materialize(ds)
+        spec = CoresetSpec(task=task, budgets=m)
+        cs = pipeline.build(spec, key=jax.random.fold_in(key, 2), ledger=led)
         for j in range(ds.T):
             led.party_to_server("rows", j, m * ds.dims[j])
-        report(f"{name}({m})", ridge_closed_form(XS, yS, lam, w), led)
+        fit = fit_ridge(ds, cs, lam)
+        report(f"{name}({m})", fit.params, led)
+        rel = evaluate(ds, fit, baseline=theta_full).rel_error
+        print(f"    full-data relative error: {rel:.4f}")
         if name == "C-CENTRAL":
             print("    DIS round bill:")
             for tag, units in sorted(led.by_tag().items()):

@@ -2,9 +2,14 @@
 construction for vertical federated learning.
 
 Public API:
-  build_coreset, build_coreset_jit, build_coresets_batched,
-  build_coreset_streaming, CoresetTask, register_task, get_task,
-  CORESET_TASKS, SCORE_BACKENDS, resolve_backend          (api — unified pipeline)
+  CoresetSpec, ExecutionPlan, compile_plan, ENGINES       (plan — declarative spec
+                                                           + auto-planner)
+  CoresetPipeline, build_coreset, build_coreset_jit,
+  build_coresets_batched, build_coreset_streaming,
+  CoresetTask, register_task, get_task,
+  CORESET_TASKS, SCORE_BACKENDS, resolve_backend          (api — spec-compiled engines)
+  fit_ridge, fit_kmeans, evaluate, end_to_end,
+  FitResult, EvalReport, full_data_coreset                (solve — downstream layer)
   VFLDataset, split_columns, standardize                  (vfl)
   CommLedger, CommSchedule, theoretical_dis_cost          (comm)
   dis_plan, dis_plan_full, dis_plan_blocked, server_plan, uniform_plan,
@@ -32,6 +37,7 @@ from repro.core.api import (
     CORESET_TASKS,
     SCORE_BACKENDS,
     BatchedCoresets,
+    CoresetPipeline,
     CoresetTask,
     build_coreset,
     build_coreset_jit,
@@ -40,6 +46,24 @@ from repro.core.api import (
     get_task,
     register_task,
     resolve_backend,
+)
+from repro.core.plan import (
+    DEFAULT_CHUNK_BLOCKS,
+    ENGINES,
+    CoresetSpec,
+    ExecutionPlan,
+    compile_plan,
+    memory_model,
+)
+from repro.core.solve import (
+    EvalReport,
+    FitResult,
+    end_to_end,
+    evaluate,
+    fit_kmeans,
+    fit_ridge,
+    full_data_coreset,
+    solver_for,
 )
 from repro.core.comm import CommLedger, CommSchedule, theoretical_dis_cost
 from repro.core.coreset import Coreset, vkmc_coreset_ratio, vrlr_coreset_ratio

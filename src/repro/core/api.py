@@ -1,4 +1,4 @@
-"""Unified CoresetPipeline API: one entry point for every coreset task.
+"""Unified CoresetPipeline API: one declarative entry point for every engine.
 
 The paper's Algorithms 1-3 share a single shape — party-local scores ->
 DIS sampling -> importance weights — which this module makes explicit:
@@ -8,28 +8,30 @@ DIS sampling -> importance weights — which this module makes explicit:
     Shipped tasks: ``vrlr`` (Algorithm 2), ``vkmc`` (Algorithm 3), ``uniform``
     (the U-* baseline).  New tasks (e.g. communication-compressed or DP
     score variants) plug in with one decorator and inherit the DIS core,
-    accounting, and batched construction for free.
-  * ScoreBackend — how party-local scores are computed: ``pallas`` (the
-    Pallas kernels; interpret-mode on CPU), ``ref`` (pure-jnp references,
-    vmap-safe), ``norm`` (row-norm^2 ablation, as in the mesh selector).
-  * :func:`build_coreset` — the single sequential entry point.  Communication
-    is derived *after* sampling from the plan's realised round-2 counts via
-    :class:`repro.core.comm.CommSchedule`; nothing imperative happens in the
-    traced path.
-  * :func:`build_coreset_jit` — the one-dispatch fast path: scoring (stacked
-    party axis, fused kernels) + DIS compiled into ONE jitted function per
-    ``(task, shapes, backend, params)`` cache key.
-  * :func:`build_coresets_batched` — seeds x budget-grid construction as ONE
-    jit-compiled ``vmap(vmap(...))`` call over the pure
-    :func:`repro.core.dis.dis_plan_full` core, using the ``m_cap`` prefix
-    convention for the budget grid.
-  * :func:`build_coreset_streaming` — n as a streaming dimension: block-scan
-    scoring (:mod:`repro.core.streaming`) + the hierarchical (party, block)
-    DIS sampler, peak device memory O(block_size * d) at any n.
+    accounting, and every engine for free.
+  * :class:`CoresetPipeline` — the spec-compiled entry point.  A frozen
+    :class:`repro.core.plan.CoresetSpec` is compiled by
+    :func:`repro.core.plan.compile_plan` into an
+    :class:`~repro.core.plan.ExecutionPlan` naming ONE concrete engine —
+    ``materialized | batched | streamed | pipelined`` — with auto-selection
+    driven by the memory model when the spec carries a
+    ``memory_budget_bytes``; ``CoresetPipeline.build`` dispatches on the
+    plan.  ``pipeline.plan(spec).describe()`` shows every planner decision
+    (engine, clamps, predicted peak bytes, predicted comm units) before
+    anything runs.
+  * The four legacy entry points — :func:`build_coreset` (materialized),
+    :func:`build_coreset_jit` (materialized, fused one-dispatch),
+    :func:`build_coreset_streaming` (streamed/pipelined), and
+    :func:`build_coresets_batched` (batched) — are thin shims constructing
+    forced-engine specs; each is DRAW-IDENTICAL to the same spec through
+    ``CoresetPipeline.build`` (same code path, pinned by
+    ``tests/test_plan.py``).
 
 Key-consumption choreography matches the seed builders exactly, so the
 deprecated ``build_vrlr_coreset`` / ``build_vkmc_coreset`` shims in
 :mod:`repro.core` return bit-identical ``(S, w)`` for the same PRNG key.
+The downstream solve layer (closed-form weighted ridge, weighted Lloyd,
+relative-error evaluation) lives in :mod:`repro.core.solve`.
 """
 
 from __future__ import annotations
@@ -44,6 +46,14 @@ import numpy as np
 from repro.core.comm import CommLedger, CommSchedule
 from repro.core.coreset import Coreset
 from repro.core.dis import _float_dtype, dis_plan_full, uniform_plan
+from repro.core.plan import (
+    DEFAULT_CHUNK_BLOCKS,
+    ENGINES,
+    SCORE_BACKENDS,
+    CoresetSpec,
+    ExecutionPlan,
+    compile_plan,
+)
 from repro.core.sensitivity import (
     norm_scores,
     vkmc_local_scores,
@@ -52,8 +62,6 @@ from repro.core.sensitivity import (
 from repro.core.vfl import VFLDataset
 from repro.core.vkmc import kmeans
 from repro.utils.registry import Registry
-
-SCORE_BACKENDS = ("pallas", "ref", "norm")
 
 CORESET_TASKS = Registry("coreset_task")
 
@@ -203,31 +211,17 @@ CORESET_TASKS.register("uniform")(
 
 
 # --------------------------------------------------------------------------
-# Sequential entry point
+# Engine executors — one per ExecutionPlan.engine.  These are the exact
+# legacy builder bodies, factored so the shims and the pipeline share ONE
+# code path (draw identity by construction, pinned by tests/test_plan.py).
 # --------------------------------------------------------------------------
 
-def build_coreset(
-    task: Union[str, CoresetTask],
-    ds: VFLDataset,
-    budget: int,
-    *,
-    key: jax.Array,
-    backend: str = "auto",
-    ledger: Optional[CommLedger] = None,
-    **params,
+def _exec_materialized(
+    spec: CoresetTask, ds: VFLDataset, m: int, key, backend: str,
+    ledger: Optional[CommLedger], params: dict,
 ) -> Coreset:
-    """Build one coreset of ``budget`` rows for ``task`` on ``ds``.
-
-    Task-specific knobs (vkmc's ``k``/``alpha``/``local_iters``) pass through
-    ``**params`` to the task's score function.  ``backend`` defaults to
-    ``"auto"`` (:func:`resolve_backend`: kernels on TPU/GPU, jnp refs on
-    CPU).  The exact per-round communication bill is derived from the
-    realised plan and recorded on ``ledger`` (when given);
-    ``Coreset.comm_units`` is always this construction's own total.
-    """
-    spec = get_task(task)
-    backend = resolve_backend(backend)
-    m = int(budget)
+    """The eager sequential engine — the fidelity reference against the
+    seed's builders (scores computed eagerly, DIS on the full matrix)."""
     if spec.needs_labels and ds.y is None:
         raise ValueError(f"{spec.name} requires labels at party T")
     if spec.score_fn is None:
@@ -244,42 +238,24 @@ def build_coreset(
     return Coreset(S, w, schedule.total)
 
 
-# --------------------------------------------------------------------------
-# Fused scoring+DIS fast path: ONE compiled dispatch per construction
-# --------------------------------------------------------------------------
-
 # (task spec, dims, labeled?, n, m, backend, params) -> jitted builder.
 _JIT_BUILDERS: dict = {}
 
 
-def build_coreset_jit(
-    task: Union[str, CoresetTask],
-    ds: VFLDataset,
-    budget: int,
-    *,
-    key: jax.Array,
-    backend: str = "auto",
-    ledger: Optional[CommLedger] = None,
-    **params,
+def _exec_fused(
+    spec: CoresetTask, ds: VFLDataset, m: int, key, backend: str,
+    ledger: Optional[CommLedger], params: dict,
 ) -> Coreset:
-    """One-dispatch :func:`build_coreset`: scoring + :func:`dis_plan_full`
-    fused into a single jitted function, cached per ``(task, shapes,
-    backend, params)``.  ``backend="auto"`` resolves per
-    :func:`resolve_backend` before the cache key is formed.
+    """The materialized engine's fused fast path: scoring +
+    :func:`dis_plan_full` in ONE jitted dispatch, cached per ``(task,
+    shapes, backend, params)``.
 
-    The sequential :func:`build_coreset` stays the fidelity reference — it
-    runs scoring eagerly and is the bit-identity anchor against the seed;
-    this fast path traces the exact same score function and DIS core into
-    one XLA program (a T-party build is ONE launch instead of T+1) and
-    amortises compilation across repeated builds of the same geometry.
-    Whole-program fusion may reorder fp reductions vs the eager reference,
-    so weights agree to fp tolerance (not bitwise) and a draw landing
-    exactly on a categorical boundary could in principle differ — use the
-    sequential path where cross-version draw stability matters.
+    The eager :func:`_exec_materialized` stays the bit-identity anchor;
+    whole-program fusion may reorder fp reductions, so weights agree to fp
+    tolerance (not bitwise) and a draw landing exactly on a categorical
+    boundary could in principle differ — use the eager path where
+    cross-version draw stability matters.
     """
-    spec = get_task(task)
-    backend = resolve_backend(backend)
-    m = int(budget)
     if spec.needs_labels and ds.y is None:
         raise ValueError(f"{spec.name} requires labels at party T")
 
@@ -314,91 +290,57 @@ def build_coreset_jit(
     return Coreset(plan.indices, plan.weights, schedule.total)
 
 
-# --------------------------------------------------------------------------
-# Streaming construction: block-scan scoring + hierarchical DIS
-# --------------------------------------------------------------------------
-
-# superchunk width when chunk_blocks is not given: deep enough to amortise
-# the per-dispatch overhead, shallow enough that two prefetch slots + one
-# resident superchunk stay a small multiple of the single-block footprint
-DEFAULT_CHUNK_BLOCKS = 8
+# sharded block-mass helpers per task (the `sharded_masses` plan toggle)
+_SHARDED_MASSES: dict = {}
 
 
-def build_coreset_streaming(
-    task: Union[str, CoresetTask],
-    ds: VFLDataset,
-    budget: int,
-    *,
-    key: jax.Array,
-    block_size: int = 65536,
-    chunk_blocks: Optional[int] = None,
-    prefetch: Optional[bool] = None,
-    backend: str = "auto",
-    ledger: Optional[CommLedger] = None,
-    probe: Optional[Callable[[], None]] = None,
-    **params,
+def _sharded_mass_table(task_name: str, key, ds: VFLDataset,
+                        block_size: int, backend: str, params: dict):
+    """Compute the (T, nb) block-mass table data-parallel over a one-axis
+    mesh spanning every local device (shard_map + two psums — see
+    :mod:`repro.core.streaming`).  The per-row scores the sampler later
+    recomputes come from the scorer's own block path; ``backend`` is
+    forwarded so vkmc's iterated center solve runs the SAME kernels as the
+    scorer (a mismatch would build the table from different centers), and
+    the table matches the scorer's up to fp reduction order."""
+    from repro.core.streaming import (
+        vkmc_block_masses_sharded,
+        vrlr_block_masses_sharded,
+    )
+
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+    if task_name == "vrlr":
+        kw = {k: v for k, v in params.items() if k == "rcond"}
+        return vrlr_block_masses_sharded(mesh, ds, block_size, **kw)
+    if task_name == "vkmc":
+        kw = {k: v for k, v in params.items()
+              if k in ("k", "alpha", "local_iters", "center_sample")}
+        return vkmc_block_masses_sharded(mesh, ds, block_size, key=key,
+                                         use_kernel=_use_kernel(backend),
+                                         **kw)
+    raise ValueError(
+        f"sharded_masses supports tasks ('vrlr', 'vkmc'), got {task_name!r}"
+    )
+
+
+def _exec_streaming(
+    spec: CoresetTask, ds: VFLDataset, m: int, key, backend: str,
+    ledger: Optional[CommLedger], probe, block_size: int, chunk_blocks: int,
+    prefetch: bool, pipelined: bool, sharded_masses: bool, params: dict,
 ) -> Coreset:
-    """Build one coreset with n as a STREAMING dimension: block-scan scoring
-    plus the hierarchical (party, block)-cell DIS sampler, so peak device
-    memory is O(chunk_blocks * block_size * d) — the (T, n) score matrix and
-    the (n, d) design are never materialized (pass a numpy-backed
-    ``VFLDataset`` to keep the raw data off-device too).
-
-    ``chunk_blocks`` (default :data:`DEFAULT_CHUNK_BLOCKS`, clamped to the
-    number of blocks) sets the PIPELINED dispatch granularity: scoring
-    passes consume double-buffered (chunk_blocks, T, bs, s) superchunks and
-    run the per-block step as a ``lax.scan`` in one dispatch per superchunk,
-    and the touched-block redraw scores + draws one superchunk-sized group
-    per dispatch; ``prefetch`` issues the async staging of the next
-    superchunk while the current one computes.  Its default is
-    backend-aware: on CPU the zero-copy staging already overlaps with the
-    async dispatch of the current chunk's compute, so eager prefetch only
-    adds a live slot (the BENCH ablation measures it strictly slower) and
-    the default is off; on TPU/GPU the extra in-flight H2D transfer is the
-    point and the default is on.  ``chunk_blocks=1`` with
-    ``prefetch=False`` selects the strictly block-at-a-time engine — the
-    same draws, one dispatch per block (the draw-identity oracle pinned by
-    ``tests/test_streaming_pipelined.py``).  Both knobs are validated
-    host-side: a non-positive (or non-integral) value raises ``ValueError``
-    before any work happens; values above the block count are clamped, so
-    ``chunk_blocks >= nb`` means one superchunk spanning the whole dataset.
-
-    The sampled marginal is exactly the flat plan's g_i/G (the two-level
-    sampling telescopes — see :func:`repro.core.dis.dis_plan_blocked`), and
-    with ``block_size >= ds.n`` the draws coincide with
-    :func:`build_coreset` bit for bit when the blockwise scores do (e.g.
-    the row-local ``norm`` backend).  ``probe`` (if given) is invoked once
-    per superchunk step — instrumentation hook for the memory benchmark.
-    The communication bill is unchanged: blocking is server-side
-    bookkeeping; parties still ship one scalar mass per round-1 row
-    (aggregated per party), m indices, and m score shares.
+    """The streamed / pipelined engines: block-scan scoring + hierarchical
+    (party, block) DIS.  ``pipelined`` selects the superchunk-grouped
+    redraw (:func:`repro.core.streaming.dis_plan_streamed_batched`) — the
+    same draws as the block-at-a-time reference, fewer dispatches.  All
+    knobs arrive RESOLVED (validated by :class:`CoresetSpec`, clamped by
+    the planner) — nothing is coerced here.
     """
     from repro.core.streaming import (
         dis_plan_streamed,
         dis_plan_streamed_batched,
         make_stream_scorer,
     )
-    from repro.core.vfl import block_geometry
 
-    spec = get_task(task)
-    backend = resolve_backend(backend)
-    m = int(budget)
-    # host-side knob validation (the budget-validation pattern of
-    # build_coresets_batched): fail loudly before any pass is dispatched
-    if not isinstance(block_size, (int, np.integer)) or block_size < 1:
-        raise ValueError(
-            f"block_size must be a positive int, got {block_size!r}"
-        )
-    nb, _ = block_geometry(ds.n, int(block_size))
-    if chunk_blocks is None:
-        chunk_blocks = DEFAULT_CHUNK_BLOCKS
-    if not isinstance(chunk_blocks, (int, np.integer)) or chunk_blocks < 1:
-        raise ValueError(
-            f"chunk_blocks must be a positive int, got {chunk_blocks!r}"
-        )
-    chunk_blocks = min(int(chunk_blocks), nb)      # > nb: one full-span chunk
-    if prefetch is None:
-        prefetch = jax.default_backend() in ("tpu", "gpu")
     if spec.needs_labels and ds.y is None:
         raise ValueError(f"{spec.name} requires labels at party T")
     if spec.score_fn is None:
@@ -407,22 +349,28 @@ def build_coreset_streaming(
         schedule.record(ledger)
         return Coreset(S, w, schedule.total)
 
+    masses = None
+    if sharded_masses:
+        # task/backend compatibility was validated by compile_plan — every
+        # path into this executor goes through the planner
+        masses = _sharded_mass_table(spec.name, key, ds, block_size,
+                                     backend, params)
     scorer = make_stream_scorer(spec.name, key, ds, int(block_size), backend,
                                 probe=probe, chunk_blocks=chunk_blocks,
-                                prefetch=prefetch, **params)
+                                prefetch=prefetch, masses=masses, **params)
     if not bool(scorer.masses.sum() > 0):
         raise ValueError("DIS requires a positive total score")
-    if chunk_blocks == 1 and not prefetch:
-        plan = dis_plan_streamed(scorer, m, probe=probe)
-    else:
+    if pipelined:
         plan = dis_plan_streamed_batched(scorer, m, probe=probe)
+    else:
+        plan = dis_plan_streamed(scorer, m, probe=probe)
     schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
     schedule.record(ledger)
     return Coreset(plan.indices, plan.weights, schedule.total)
 
 
 # --------------------------------------------------------------------------
-# Batched multi-seed / multi-budget construction (one compilation)
+# Batched multi-seed / multi-budget engine (one compilation)
 # --------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -468,55 +416,17 @@ class BatchedCoresets:
         )
 
 
-def build_coresets_batched(
-    task: Union[str, CoresetTask],
-    ds: VFLDataset,
-    ms,
-    *,
-    key: Optional[jax.Array] = None,
-    num_seeds: int = 1,
-    keys: Optional[jax.Array] = None,
-    backend: str = "ref",
-    m_cap: Optional[int] = None,
-    **params,
+def _exec_batched(
+    spec: CoresetTask, ds: VFLDataset, ms: Tuple[int, ...], keys,
+    backend: str, m_cap: int, params: dict,
 ) -> BatchedCoresets:
-    """Construct coresets for every (seed, budget) pair in one compiled call.
-
-    ``ms`` is the budget grid (any iterable of ints); seeds come either from
-    ``keys`` (a stacked ``(R, ...)`` key array) or ``jax.random.split(key,
-    num_seeds)``.  The whole grid is ``jit(vmap(vmap(dis_plan_full)))`` over
-    the pure DIS core: budgets below ``max(ms)`` use the prefix-masking
-    convention (draws are iid, so a prefix of the capacity draw is a valid
-    m-sample), and for ``m == max(ms)`` each cell is exactly the sequential
-    :func:`build_coreset` result for that key.
-
-    ``backend`` defaults to ``"ref"`` (the pure-jnp scores are cheapest on
-    a CPU container); ``"pallas"`` also vmaps — the kernels fold the seed
-    batch into their grid via the native pallas batching rule, so the whole
-    grid is still one dispatch (interpret-mode on CPU, compiled on TPU) —
-    and ``"auto"`` resolves per :func:`resolve_backend`.  ``m_cap``
-    overrides the draw capacity (defaults to ``max(ms)``); every budget
-    must lie in [1, m_cap] or the builder raises before tracing.
+    """The batched engine: every (seed, budget) cell in one compiled
+    ``jit(vmap(vmap(dis_plan_full)))`` call over the pure DIS core, using
+    the ``m_cap`` prefix-masking convention for the budget grid.  For ``m
+    == m_cap`` each cell is exactly the eager :func:`_exec_materialized`
+    result for that key (eager hoisted totals keep the weight arithmetic
+    bit-identical for deterministic-score tasks).
     """
-    spec = get_task(task)
-    backend = resolve_backend(backend)
-    ms = tuple(int(m) for m in ms)
-    if not ms:
-        raise ValueError("empty budget grid")
-    m_cap = max(ms) if m_cap is None else int(m_cap)
-    # host-side validation: a budget outside [1, m_cap] would silently
-    # produce a garbage masked prefix (negative-length or truncated draws)
-    # inside the traced core — fail loudly here instead.
-    bad = [m for m in ms if m < 1 or m > m_cap]
-    if bad:
-        raise ValueError(
-            f"budgets {bad} outside [1, m_cap={m_cap}]; every budget in the "
-            f"grid must be >= 1 and <= the draw capacity"
-        )
-    if keys is None:
-        if key is None:
-            raise ValueError("pass either `key` (+ num_seeds) or `keys`")
-        keys = jax.random.split(key, num_seeds)
     if spec.needs_labels and ds.y is None:
         raise ValueError(f"{spec.name} requires labels at party T")
     ms_arr = jnp.asarray(ms, jnp.int32)
@@ -569,3 +479,222 @@ def build_coresets_batched(
         counts=None if spec.score_fn is None else counts,
         ms=ms, T=ds.T,
     )
+
+
+# --------------------------------------------------------------------------
+# CoresetPipeline: spec in, plan-dispatched build out
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CoresetPipeline:
+    """The declarative entry point: ``build(spec)`` compiles the spec into
+    an :class:`~repro.core.plan.ExecutionPlan` and dispatches to the named
+    engine.
+
+    ``plan(spec)`` exposes the compiled plan without running anything
+    (``plan.describe()`` prints engine, resolved knobs, the full memory
+    model, and the exact predicted communication bill); ``build`` also
+    accepts a pre-compiled plan so introspect-then-run costs one
+    compilation.  A forced-engine spec reproduces the corresponding legacy
+    entry point draw for draw — the legacy functions ARE such specs.
+    """
+
+    ds: VFLDataset
+
+    def plan(self, spec: CoresetSpec) -> ExecutionPlan:
+        return compile_plan(spec, self.ds)
+
+    def build(
+        self,
+        spec: Union[CoresetSpec, ExecutionPlan],
+        *,
+        key: Optional[jax.Array] = None,
+        keys: Optional[jax.Array] = None,
+        ledger: Optional[CommLedger] = None,
+        probe: Optional[Callable[[], None]] = None,
+    ) -> Union[Coreset, BatchedCoresets]:
+        """Build per the (compiled) spec.
+
+        Returns a :class:`Coreset` for single-cell plans and a
+        :class:`BatchedCoresets` grid for the batched engine.  ``keys``
+        (a stacked key array) overrides ``key`` + ``spec.num_seeds`` for
+        the batched engine; ``probe`` is the streaming engines'
+        per-superchunk instrumentation hook.  The batched engine derives
+        its bills lazily per cell (``grid.coreset(..., ledger=...)``), so
+        ``ledger`` applies to single-cell engines only.
+        """
+        if isinstance(spec, ExecutionPlan):
+            ep = spec
+            if (ep.n, ep.dims) != (self.ds.n, self.ds.dims):
+                raise ValueError(
+                    f"plan was compiled for a dataset with n={ep.n}, "
+                    f"dims={ep.dims}; this pipeline's dataset has "
+                    f"n={self.ds.n}, dims={self.ds.dims} — recompile with "
+                    f"plan(spec)"
+                )
+        else:
+            ep = self.plan(spec)
+        cspec = ep.spec
+        task = get_task(cspec.task)
+
+        if ep.engine == "batched":
+            if keys is None:
+                if key is None:
+                    raise ValueError("pass either `key` (+ num_seeds) or `keys`")
+                keys = jax.random.split(key, cspec.num_seeds)
+            return _exec_batched(task, self.ds, cspec.budgets, keys,
+                                 ep.backend, ep.m_cap, cspec.params)
+
+        if key is None:
+            raise ValueError(f"the {ep.engine} engine requires `key`")
+        m = cspec.budget
+        if ep.engine == "materialized":
+            fn = _exec_fused if cspec.jit else _exec_materialized
+            return fn(task, self.ds, m, key, ep.backend, ledger, cspec.params)
+        return _exec_streaming(
+            task, self.ds, m, key, ep.backend, ledger, probe,
+            cspec.block_size, ep.chunk_blocks, ep.prefetch,
+            pipelined=(ep.engine == "pipelined"),
+            sharded_masses=cspec.sharded_masses, params=cspec.params,
+        )
+
+
+# --------------------------------------------------------------------------
+# Legacy entry points — thin shims over forced-engine specs.
+# --------------------------------------------------------------------------
+
+def build_coreset(
+    task: Union[str, CoresetTask],
+    ds: VFLDataset,
+    budget: int,
+    *,
+    key: jax.Array,
+    backend: str = "auto",
+    ledger: Optional[CommLedger] = None,
+    **params,
+) -> Coreset:
+    """Build one coreset of ``budget`` rows for ``task`` on ``ds`` — the
+    MATERIALIZED engine (shim over ``CoresetSpec(engine="materialized")``).
+
+    Task-specific knobs (vkmc's ``k``/``alpha``/``local_iters``) pass through
+    ``**params`` to the task's score function.  ``backend`` defaults to
+    ``"auto"`` (:func:`resolve_backend`: kernels on TPU/GPU, jnp refs on
+    CPU).  The exact per-round communication bill is derived from the
+    realised plan and recorded on ``ledger`` (when given);
+    ``Coreset.comm_units`` is always this construction's own total.
+    """
+    spec = CoresetSpec(task=task, budgets=int(budget),
+                       engine="materialized", backend=backend, params=params)
+    return CoresetPipeline(ds).build(spec, key=key, ledger=ledger)
+
+
+def build_coreset_jit(
+    task: Union[str, CoresetTask],
+    ds: VFLDataset,
+    budget: int,
+    *,
+    key: jax.Array,
+    backend: str = "auto",
+    ledger: Optional[CommLedger] = None,
+    **params,
+) -> Coreset:
+    """One-dispatch :func:`build_coreset` — the materialized engine's fused
+    fast path (shim over ``CoresetSpec(engine="materialized", jit=True)``):
+    scoring + DIS compiled into a single jitted function, cached per
+    ``(task, shapes, backend, params)``.  Weights agree with the eager
+    reference to fp tolerance (whole-program fusion reorders reductions);
+    use :func:`build_coreset` where cross-version draw stability matters.
+    """
+    spec = CoresetSpec(task=task, budgets=int(budget),
+                       engine="materialized", jit=True, backend=backend,
+                       params=params)
+    return CoresetPipeline(ds).build(spec, key=key, ledger=ledger)
+
+
+def build_coreset_streaming(
+    task: Union[str, CoresetTask],
+    ds: VFLDataset,
+    budget: int,
+    *,
+    key: jax.Array,
+    block_size: int = 65536,
+    chunk_blocks: Optional[int] = None,
+    prefetch: Optional[bool] = None,
+    backend: str = "auto",
+    ledger: Optional[CommLedger] = None,
+    probe: Optional[Callable[[], None]] = None,
+    **params,
+) -> Coreset:
+    """Build one coreset with n as a STREAMING dimension — the streamed /
+    pipelined engines (shim over ``CoresetSpec(engine="pipelined")``; the
+    planner lowers ``chunk_blocks=1, prefetch=False`` to the strictly
+    block-at-a-time streamed engine, same draws either way).
+
+    Block-scan scoring plus the hierarchical (party, block)-cell DIS
+    sampler keep peak device memory O(chunk_blocks * block_size * d) — the
+    (T, n) score matrix and the (n, d) design are never materialized (pass
+    a numpy-backed ``VFLDataset`` to keep the raw data off-device too).
+
+    ``chunk_blocks`` (default :data:`repro.core.plan.DEFAULT_CHUNK_BLOCKS`)
+    sets the pipelined dispatch granularity; ``prefetch`` (default
+    backend-aware: on for TPU/GPU, off on CPU where zero-copy staging
+    already overlaps async dispatch) double-buffers the superchunk
+    staging.  Knob validation is centralized in
+    :class:`~repro.core.plan.CoresetSpec` (non-positive / non-integral
+    values raise ``ValueError`` before any work); ``chunk_blocks`` above
+    the block count is clamped by the PLANNER — an explicit decision
+    surfaced in ``CoresetPipeline(ds).plan(spec).describe()``.
+
+    The sampled marginal is exactly the flat plan's g_i/G (the two-level
+    sampling telescopes — :func:`repro.core.dis.dis_plan_blocked`), and
+    with ``block_size >= ds.n`` the draws coincide with
+    :func:`build_coreset` bit for bit when the blockwise scores do (e.g.
+    the row-local ``norm`` backend).  ``probe`` (if given) is invoked once
+    per superchunk step — instrumentation hook for the memory benchmark.
+    The communication bill is unchanged: blocking is server-side
+    bookkeeping.
+    """
+    spec = CoresetSpec(task=task, budgets=int(budget),
+                       engine="pipelined", backend=backend,
+                       block_size=block_size, chunk_blocks=chunk_blocks,
+                       prefetch=prefetch, params=params)
+    return CoresetPipeline(ds).build(spec, key=key, ledger=ledger,
+                                     probe=probe)
+
+
+def build_coresets_batched(
+    task: Union[str, CoresetTask],
+    ds: VFLDataset,
+    ms,
+    *,
+    key: Optional[jax.Array] = None,
+    num_seeds: int = 1,
+    keys: Optional[jax.Array] = None,
+    backend: str = "ref",
+    m_cap: Optional[int] = None,
+    **params,
+) -> BatchedCoresets:
+    """Construct coresets for every (seed, budget) pair in one compiled call
+    — the BATCHED engine (shim over ``CoresetSpec(engine="batched")``).
+
+    ``ms`` is the budget grid (any iterable of ints); seeds come either from
+    ``keys`` (a stacked ``(R, ...)`` key array) or ``jax.random.split(key,
+    num_seeds)``.  Budgets below ``max(ms)`` use the prefix-masking
+    convention (draws are iid, so a prefix of the capacity draw is a valid
+    m-sample); for ``m == max(ms)`` each cell is exactly the sequential
+    :func:`build_coreset` result for that key.
+
+    ``backend`` defaults to ``"ref"`` (the pure-jnp scores are cheapest on
+    a CPU container); ``"pallas"`` also vmaps — the kernels fold the seed
+    batch into their grid via the native pallas batching rule — and
+    ``"auto"`` resolves per :func:`resolve_backend`.  ``m_cap`` overrides
+    the draw capacity (defaults to ``max(ms)``); every budget must lie in
+    [1, m_cap] or the spec raises before tracing.
+    """
+    ms = tuple(int(m) for m in ms)       # the legacy coercion, pre-validation
+    if keys is not None:
+        num_seeds = int(keys.shape[0])
+    spec = CoresetSpec(task=task, budgets=ms, num_seeds=num_seeds,
+                       engine="batched", backend=backend, m_cap=m_cap,
+                       params=params)
+    return CoresetPipeline(ds).build(spec, key=key, keys=keys)

@@ -136,6 +136,18 @@ class CommSchedule:
         return CommSchedule(tuple(ops))
 
     @staticmethod
+    def dis_total(T: int, m: int) -> int:
+        """Algorithm 1's exact total bill, BEFORE any draw happens.
+
+        The total is independent of the realised round-2 split (the a_j
+        only re-attribute the m index uploads between parties):
+        2T (round 1) + m (round 2 up) + mT (round 2 broadcast) + mT
+        (round 3).  This is what lets the planner
+        (:mod:`repro.core.plan`) predict the bill exactly at compile time.
+        """
+        return CommSchedule.dis(T, m, counts=[m] + [0] * (T - 1)).total
+
+    @staticmethod
     def uniform(T: int, m: int) -> "CommSchedule":
         """U-* baseline: the server broadcasts its m uniform indices (mT)."""
         return CommSchedule(

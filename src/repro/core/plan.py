@@ -1,0 +1,495 @@
+"""CoresetSpec -> ExecutionPlan: the declarative layer over every engine.
+
+After the perf PRs the repo had four divergent build entry points
+(``build_coreset``, ``build_coreset_jit``, ``build_coreset_streaming``,
+``build_coresets_batched``) with inconsistent knobs and validation.  This
+module makes the pipeline spec-compiled, in the declarative-launcher idiom:
+
+  * :class:`CoresetSpec` — ONE frozen description of a construction: task,
+    budgets, seeds, backend, engine preference, streaming knobs
+    (``block_size``/``chunk_blocks``/``prefetch``), ``memory_budget_bytes``
+    and the ``sharded_masses`` toggle.  ALL knob validation lives in its
+    ``__post_init__`` with uniform ``ValueError`` messages — no entry point
+    validates anything on its own anymore.
+  * :class:`ExecutionPlan` — the compiled plan: ONE concrete engine
+    (``materialized | batched | streamed | pipelined``), resolved backend
+    and knobs (the ``chunk_blocks > nb`` clamp is an explicit, recorded
+    planner decision, not a silent coercion), the full memory model, the
+    predicted communication bill (via :class:`repro.core.comm.CommSchedule`
+    — the total is count-independent, so it is exact before any draw), and
+    ``describe()`` introspection.
+  * :func:`compile_plan` — the auto-planner.  Engine selection is driven by
+    a MEMORY MODEL calibrated against the measured yardsticks in
+    BENCH_kernels.json: the materialized path holds the (T, n, s) stacked
+    design plus the (T, n) score matrix; the streamed path holds one
+    (T, bs, s) block (measured peak within ~2% of ``block_bytes``); the
+    pipelined path holds up to 2.5x one (C, T, bs, s) superchunk (two
+    double-buffered staging slots + the live compute residency — measured
+    peaks are <= 2.01x ``chunk_bytes``).  Given ``memory_budget_bytes`` the
+    planner picks the FASTEST engine whose predicted peak fits:
+    materialized when everything fits, pipelined when a superchunk pipeline
+    fits, streamed otherwise (the minimum-footprint engine; if even that
+    exceeds the budget the plan is still streamed, flagged
+    ``budget_exceeded``).  Grids (num_seeds > 1 or multiple budgets) always
+    compile to the batched engine.
+
+The executors themselves live in :mod:`repro.core.api`
+(:class:`~repro.core.api.CoresetPipeline` dispatches on the plan); this
+module stays import-light so the spec can be constructed anywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.comm import CommSchedule
+from repro.core.vfl import VFLDataset, block_geometry
+
+SCORE_BACKENDS = ("pallas", "ref", "norm")
+
+ENGINES = ("materialized", "batched", "streamed", "pipelined")
+
+# superchunk width when chunk_blocks is not given: deep enough to amortise
+# the per-dispatch overhead, shallow enough that two prefetch slots + one
+# resident superchunk stay a small multiple of the single-block footprint
+DEFAULT_CHUNK_BLOCKS = 8
+
+# pipelined peak model: two double-buffered staging slots + the live compute
+# residency of one superchunk.  BENCH_kernels.json's streaming_pipelined
+# sweep measures every peak <= 2.01x chunk_bytes; 2.5x is the documented
+# bound the benchmark asserts against.
+PIPELINED_PEAK_FACTOR = 2.5
+
+_FLOAT_BYTES = 4        # every engine scores in float32
+
+
+def _is_int(x) -> bool:
+    return isinstance(x, (int, np.integer)) and not isinstance(x, bool)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoresetSpec:
+    """Frozen declarative description of one coreset construction.
+
+    ``budgets`` accepts a single int or any iterable of ints; a grid
+    (``num_seeds > 1`` or multiple budgets) compiles to the batched engine.
+    ``engine="auto"`` lets the planner choose from the memory model;
+    forcing an engine pins the exact legacy code path (the thin shims
+    ``build_coreset`` / ``build_coreset_jit`` / ``build_coreset_streaming``
+    / ``build_coresets_batched`` are precisely such forced specs, and stay
+    draw-identical).  ``params`` carries task-specific score knobs (vkmc's
+    ``k``/``alpha``/``local_iters``, vrlr's ``rcond``) verbatim.
+
+    All validation is centralized HERE — uniform ``ValueError`` messages,
+    raised at spec construction before any work happens.  The one knob
+    that is *coerced* rather than rejected, ``chunk_blocks`` above the
+    block count, is clamped by the PLANNER (an explicit decision recorded
+    in ``ExecutionPlan.notes`` and ``describe()``), never silently here.
+    """
+
+    task: Union[str, Any] = "vrlr"
+    budgets: Union[int, Tuple[int, ...]] = (512,)
+    num_seeds: int = 1
+    engine: str = "auto"
+    backend: str = "auto"
+    jit: bool = False                     # materialized fast path: one fused dispatch
+    block_size: int = 65536
+    chunk_blocks: Optional[int] = None    # None -> DEFAULT_CHUNK_BLOCKS (planner)
+    prefetch: Optional[bool] = None       # None -> backend-aware (planner)
+    memory_budget_bytes: Optional[int] = None
+    sharded_masses: bool = False          # mass table via shard_map over `data`
+    m_cap: Optional[int] = None           # batched draw capacity override
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if not (isinstance(self.task, str) or hasattr(self.task, "score_fn")):
+            raise ValueError(
+                f"task must be a registry name or CoresetTask, got {self.task!r}"
+            )
+        budgets = self.budgets
+        if _is_int(budgets):
+            budgets = (int(budgets),)
+        else:
+            budgets = tuple(budgets)
+        if not budgets:
+            raise ValueError("budgets must be a non-empty tuple of positive ints")
+        bad = [b for b in budgets if not _is_int(b) or b < 1]
+        if bad:
+            raise ValueError(
+                f"budgets must be positive ints, got {bad} in {budgets}"
+            )
+        budgets = tuple(int(b) for b in budgets)
+        object.__setattr__(self, "budgets", budgets)
+        if not _is_int(self.num_seeds) or self.num_seeds < 1:
+            raise ValueError(
+                f"num_seeds must be a positive int, got {self.num_seeds!r}"
+            )
+        if self.engine not in ("auto",) + ENGINES:
+            raise ValueError(
+                f"engine must be 'auto' or one of {ENGINES}, got {self.engine!r}"
+            )
+        if self.backend not in ("auto",) + SCORE_BACKENDS:
+            raise ValueError(
+                f"backend must be 'auto' or one of {SCORE_BACKENDS}, "
+                f"got {self.backend!r}"
+            )
+        if not isinstance(self.jit, bool):
+            raise ValueError(f"jit must be a bool, got {self.jit!r}")
+        if self.jit and self.engine not in ("auto", "materialized", "batched"):
+            raise ValueError(
+                f"jit=True is the materialized/batched fused path; it cannot "
+                f"combine with engine={self.engine!r}"
+            )
+        if not _is_int(self.block_size) or self.block_size < 1:
+            raise ValueError(
+                f"block_size must be a positive int, got {self.block_size!r}"
+            )
+        if self.chunk_blocks is not None and (
+                not _is_int(self.chunk_blocks) or self.chunk_blocks < 1):
+            raise ValueError(
+                f"chunk_blocks must be a positive int, got {self.chunk_blocks!r}"
+            )
+        if self.prefetch is not None and not isinstance(self.prefetch, bool):
+            raise ValueError(f"prefetch must be a bool, got {self.prefetch!r}")
+        if self.memory_budget_bytes is not None and (
+                not _is_int(self.memory_budget_bytes)
+                or self.memory_budget_bytes < 1):
+            raise ValueError(
+                f"memory_budget_bytes must be a positive int, "
+                f"got {self.memory_budget_bytes!r}"
+            )
+        if not isinstance(self.sharded_masses, bool):
+            raise ValueError(
+                f"sharded_masses must be a bool, got {self.sharded_masses!r}"
+            )
+        if self.sharded_masses and self.engine in ("materialized", "batched"):
+            raise ValueError(
+                f"sharded_masses computes the streaming block-mass table; it "
+                f"cannot combine with engine={self.engine!r}"
+            )
+        if self.m_cap is not None:
+            if not _is_int(self.m_cap) or self.m_cap < 1:
+                raise ValueError(
+                    f"m_cap must be a positive int, got {self.m_cap!r}"
+                )
+            over = [b for b in budgets if b > self.m_cap]
+            if over:
+                raise ValueError(
+                    f"budgets {over} outside [1, m_cap={self.m_cap}]; every "
+                    f"budget must be >= 1 and <= the draw capacity"
+                )
+        object.__setattr__(self, "params", dict(self.params))
+
+    # -- conveniences --------------------------------------------------------
+
+    @property
+    def is_grid(self) -> bool:
+        return self.num_seeds > 1 or len(self.budgets) > 1
+
+    @property
+    def budget(self) -> int:
+        """The single budget of a non-grid spec."""
+        if self.is_grid:
+            raise ValueError(
+                f"spec is a {self.num_seeds}x{len(self.budgets)} grid; "
+                f"use .budgets"
+            )
+        return self.budgets[0]
+
+    def replace(self, **kw) -> "CoresetSpec":
+        return dataclasses.replace(self, **kw)
+
+
+# --------------------------------------------------------------------------
+# Memory model (bytes) — calibrated against BENCH_kernels.json yardsticks
+# --------------------------------------------------------------------------
+
+def block_bytes(T: int, bs: int, s: int) -> int:
+    """One (T, bs, s) stacked row block — the streaming yardstick (measured
+    streamed peaks sit within ~2% of this)."""
+    return T * bs * s * _FLOAT_BYTES
+
+
+def memory_model(
+    T: int, n: int, s: int, bs: int, chunk_blocks: int,
+    num_seeds: int = 1, num_budgets: int = 1, m_cap: int = 512,
+    scored: bool = True,
+) -> dict:
+    """Predicted peak live device bytes per engine.
+
+    materialized: the (T, n, s) stacked design + the (T, n) score matrix.
+    batched:      materialized + the (R, M, m_cap) result grid.
+    streamed:     one (T, bs, s) block + its transient (T, bs) scores.
+    pipelined:    PIPELINED_PEAK_FACTOR x one (C, T, bs, s) superchunk
+                  (two double-buffered staging slots + compute residency).
+
+    ``scored=False`` (the uniform task — no scores, no design on device)
+    collapses every engine to the tiny sample buffers.
+    """
+    if not scored:
+        tiny = num_seeds * num_budgets * m_cap * 2 * _FLOAT_BYTES
+        return {e: tiny for e in ENGINES}
+    design = T * n * s * _FLOAT_BYTES
+    scores = T * n * _FLOAT_BYTES
+    blk = block_bytes(T, bs, s)
+    grid = num_seeds * num_budgets * m_cap * 3 * _FLOAT_BYTES
+    return {
+        "materialized": design + scores,
+        "batched": design + scores + grid,
+        "streamed": blk + T * bs * _FLOAT_BYTES,
+        "pipelined": int(PIPELINED_PEAK_FACTOR * chunk_blocks * blk),
+    }
+
+
+def _fmt_bytes(b: int) -> str:
+    if b >= 1 << 20:
+        return f"{b / (1 << 20):.1f}MB"
+    if b >= 1 << 10:
+        return f"{b / (1 << 10):.1f}KB"
+    return f"{b}B"
+
+
+# --------------------------------------------------------------------------
+# ExecutionPlan
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """The compiled execution of a :class:`CoresetSpec` on one dataset.
+
+    ``engine`` is concrete (one of :data:`ENGINES`); every knob is resolved
+    (``backend`` never ``"auto"``, ``chunk_blocks`` clamped to the block
+    count with the clamp recorded in ``notes``).  ``predicted_comm_units``
+    is exact, not an estimate: Algorithm 1's total is independent of the
+    realised round-2 counts (2T + m + 2mT per DIS cell, mT per uniform
+    cell), so the bill is known before any draw.  ``memory_model`` keeps
+    every engine's predicted peak so tests can pin the selection
+    thresholds; ``predicted_peak_bytes`` is the chosen engine's entry.
+    """
+
+    spec: CoresetSpec
+    engine: str
+    backend: str
+    task_name: str
+    n: int
+    T: int
+    dims: Tuple[int, ...]          # per-party feature widths (sans label col)
+    stacked_width: int
+    nb: int
+    bs: int
+    chunk_blocks: int
+    prefetch: bool
+    grid: Tuple[int, int]                  # (num_seeds, num_budgets)
+    m_cap: int
+    memory_model: Mapping[str, int]
+    predicted_peak_bytes: int
+    predicted_comm_units: int
+    budget_exceeded: bool = False
+    notes: Tuple[str, ...] = ()
+
+    @property
+    def is_grid(self) -> bool:
+        return self.grid[0] > 1 or self.grid[1] > 1
+
+    def describe(self) -> str:
+        """Human-readable plan: engine, geometry, memory table, comm bill,
+        and every planner decision (clamps, lowerings, budget verdict)."""
+        spec = self.spec
+        lines = [
+            f"ExecutionPlan: engine={self.engine}"
+            + (" (jit)" if spec.jit and self.engine == "materialized" else "")
+            + (" +sharded_masses" if spec.sharded_masses else ""),
+            f"  task={self.task_name} backend={self.backend} "
+            f"grid={self.grid[0]}x{self.grid[1]} budgets={spec.budgets} "
+            f"m_cap={self.m_cap}",
+            f"  data: n={self.n} T={self.T} s={self.stacked_width} "
+            f"blocks: {self.nb} x {self.bs} rows "
+            f"(block_size={spec.block_size})",
+        ]
+        if self.engine in ("streamed", "pipelined"):
+            lines.append(
+                f"  streaming knobs: chunk_blocks={self.chunk_blocks} "
+                f"prefetch={'on' if self.prefetch else 'off'}"
+            )
+        mm = ", ".join(f"{e}={_fmt_bytes(self.memory_model[e])}"
+                       for e in ENGINES)
+        lines.append(f"  memory model: {mm}")
+        if spec.memory_budget_bytes is None:
+            lines.append(
+                f"  budget: none -> {self.engine} "
+                f"(predicted peak {_fmt_bytes(self.predicted_peak_bytes)})"
+            )
+        else:
+            verdict = ("EXCEEDS budget — streamed is the minimum-footprint "
+                       "engine" if self.budget_exceeded else "fits")
+            lines.append(
+                f"  budget: {_fmt_bytes(spec.memory_budget_bytes)} -> "
+                f"{self.engine} (predicted peak "
+                f"{_fmt_bytes(self.predicted_peak_bytes)}, {verdict})"
+            )
+        lines.append(f"  predicted comm: {self.predicted_comm_units} units")
+        for note in self.notes:
+            lines.append(f"  note: {note}")
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# The planner
+# --------------------------------------------------------------------------
+
+def _cell_comm(T: int, m: int, uniform: bool) -> int:
+    """Exact per-cell bill via CommSchedule — the DIS total is independent
+    of the realised a_j split (:meth:`CommSchedule.dis_total`)."""
+    if uniform:
+        return CommSchedule.uniform(T, m).total
+    return CommSchedule.dis_total(T, m)
+
+
+def compile_plan(spec: CoresetSpec, ds: VFLDataset) -> ExecutionPlan:
+    """Compile ``spec`` against ``ds``'s geometry into an ExecutionPlan.
+
+    Pure planning — no scoring work, no draws; the only jax state consulted
+    is the default backend (for ``backend="auto"`` and the prefetch
+    default).  Raises the task's label requirement eagerly so a bad spec
+    fails before any engine runs.
+    """
+    import jax
+
+    from repro.core.api import get_task, resolve_backend
+
+    task = get_task(spec.task)
+    backend = resolve_backend(spec.backend)
+    if task.needs_labels and ds.y is None:
+        raise ValueError(f"{task.name} requires labels at party T")
+
+    uniform = task.score_fn is None
+    with_labels = task.needs_labels and ds.y is not None
+    if uniform:
+        s = 0
+    else:
+        _, s = ds.stacked_widths(with_labels=with_labels)
+    n, T = ds.n, ds.T
+    nb, bs = block_geometry(n, spec.block_size)
+    R, M = spec.num_seeds, len(spec.budgets)
+    m_cap = max(spec.budgets) if spec.m_cap is None else spec.m_cap
+
+    notes = []
+
+    # -- streaming knob resolution (explicit planner decisions) --------------
+    chunk_req = (DEFAULT_CHUNK_BLOCKS if spec.chunk_blocks is None
+                 else int(spec.chunk_blocks))
+    chunk = min(chunk_req, nb)
+    prefetch = (jax.default_backend() in ("tpu", "gpu")
+                if spec.prefetch is None else bool(spec.prefetch))
+
+    mm = memory_model(T, n, s, bs, chunk, R, M, m_cap, scored=not uniform)
+
+    # -- engine selection ----------------------------------------------------
+    budget_exceeded = False
+    if spec.is_grid:
+        if spec.engine not in ("auto", "batched"):
+            raise ValueError(
+                f"engine={spec.engine!r} builds one coreset per call; a "
+                f"{R}x{M} grid requires engine='batched' (or 'auto')"
+            )
+        engine = "batched"
+        if spec.engine == "auto":
+            notes.append(f"{R}x{M} grid -> batched (one compiled call)")
+    elif spec.engine != "auto":
+        engine = spec.engine
+    elif spec.memory_budget_bytes is None:
+        engine = "materialized"
+    else:
+        B = spec.memory_budget_bytes
+        if mm["materialized"] <= B:
+            engine = "materialized"
+        elif mm["pipelined"] <= B:
+            engine = "pipelined"
+        else:
+            engine = "streamed"
+            budget_exceeded = mm["streamed"] > B
+        notes.append(
+            f"auto-selected {engine} for memory_budget_bytes={B} "
+            f"(materialized needs {mm['materialized']}, pipelined "
+            f"{mm['pipelined']}, streamed {mm['streamed']})"
+        )
+
+    # the streamed engine IS the pipelined engine at C=1 without prefetch —
+    # normalize both directions so dispatch is unambiguous
+    lowered_from_pipelined = False
+    if engine == "streamed":
+        chunk, prefetch = 1, False
+    elif engine == "pipelined" and chunk == 1 and not prefetch:
+        engine = "streamed"
+        lowered_from_pipelined = True
+        notes.append(
+            "pipelined at chunk_blocks=1 without prefetch IS the "
+            "block-at-a-time engine -> lowered to streamed"
+        )
+    if chunk_req > nb and (engine == "pipelined" or lowered_from_pipelined):
+        # the documented planner clamp (NOT silent coercion: recorded here,
+        # printed by describe()) — a superchunk cannot span more than nb
+        # blocks, so chunk_blocks >= nb means one full-span superchunk.
+        # Forced-streamed plans ignore chunk_blocks entirely (chunk = 1), so
+        # no clamp note there.
+        notes.append(
+            f"chunk_blocks clamped {chunk_req} -> {nb}: n={n} at "
+            f"block_size={spec.block_size} has only {nb} blocks "
+            f"(one full-span superchunk)"
+        )
+
+    # spec flags that only make sense on SOME engines must not be dropped
+    # silently when the auto-planner picks another one — mirror the forced
+    # combinations CoresetSpec.__post_init__ already rejects
+    if spec.jit and engine not in ("materialized", "batched"):
+        raise ValueError(
+            f"jit=True is the materialized/batched fused path, but the "
+            f"auto-planner selected engine {engine!r} — drop jit or force "
+            f"a compatible engine"
+        )
+    if spec.sharded_masses:
+        if engine not in ("streamed", "pipelined"):
+            raise ValueError(
+                f"sharded_masses computes the streaming block-mass table, "
+                f"but the planner selected engine {engine!r} — force a "
+                f"streaming engine or drop the toggle"
+            )
+        if backend == "norm":
+            raise ValueError(
+                "sharded_masses computes the task's real score masses; it "
+                "cannot combine with backend='norm'"
+            )
+        if task.name not in ("vrlr", "vkmc"):
+            raise ValueError(
+                f"sharded_masses supports tasks ('vrlr', 'vkmc'), got "
+                f"{task.name!r}"
+            )
+        D = jax.device_count()
+        if not uniform and (n % D != 0 or (n // D) % bs != 0):
+            # the shard-grid requirement _check_shard_grid enforces at run
+            # time, surfaced at PLAN time so a bad spec fails before work
+            raise ValueError(
+                f"sharded_masses needs n divisible by the device count and "
+                f"the per-device shard divisible by the block size: n={n}, "
+                f"devices={D}, bs={bs}"
+            )
+
+    comm = R * sum(_cell_comm(T, m, uniform) for m in spec.budgets)
+
+    return ExecutionPlan(
+        spec=spec,
+        engine=engine,
+        backend=backend,
+        task_name=task.name,
+        n=n, T=T, dims=ds.dims, stacked_width=s, nb=nb, bs=bs,
+        chunk_blocks=chunk, prefetch=prefetch,
+        grid=(R, M), m_cap=m_cap,
+        memory_model=mm,
+        predicted_peak_bytes=mm[engine],
+        predicted_comm_units=comm,
+        budget_exceeded=budget_exceeded,
+        notes=tuple(notes),
+    )

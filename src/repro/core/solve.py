@@ -1,0 +1,246 @@
+"""The downstream solve + evaluation layer: the end of the paper's pipeline.
+
+Theorems 4.1 / 5.2 bound what happens AFTER the coreset exists: run the
+downstream scheme on the weighted sample and the objective on the FULL data
+is within (1 +- eps) of optimal.  This module closes that loop:
+
+  * :func:`fit_ridge`   — closed-form weighted ridge on the coreset rows
+    (the Pallas ``weighted_gram`` path of
+    :func:`repro.core.vrlr.ridge_closed_form`), Theorem 4.1's scheme A.
+  * :func:`fit_kmeans`  — weighted k-means++ + Lloyd on the coreset rows
+    (each Lloyd iteration is ONE fused ``kmeans_assign_update`` kernel
+    pass), Theorem 5.2's scheme A, with optional restarts picked by the
+    weighted coreset objective.
+  * :func:`evaluate`    — the paper's relative-error ratio: the FULL-data
+    objective at the coreset-fit parameters vs at the full-data-fit
+    parameters (the quantity Figures 2-3 plot).  ``rel_error = cost_fit /
+    cost_opt - 1``; an identity coreset (:func:`full_data_coreset`)
+    reproduces the full-data solve to fp tolerance, which
+    ``tests/test_solve.py`` pins.
+  * :func:`end_to_end`  — spec in, (Coreset, FitResult, EvalReport) out:
+    ``CoresetPipeline.build`` -> ``fit_*`` -> ``evaluate`` in one call,
+    used by ``benchmarks/e2e.py``, the CI smoke, and the examples.
+
+Communication composition: ``fit_*`` materializes the coreset rows, so pass
+``ledger`` to account Theorem 2.5's ``+2mT`` (in-protocol solve) — or charge
+``sum_j m*d_j`` explicitly when shipping raw rows centrally, as the
+benchmarks do; never both on one ledger.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import CoresetPipeline, get_task, resolve_backend
+from repro.core.comm import CommLedger
+from repro.core.coreset import Coreset
+from repro.core.plan import CoresetSpec
+from repro.core.vfl import VFLDataset
+from repro.core.vkmc import kmeans, kmeans_cost
+from repro.core.vrlr import ridge_closed_form, ridge_cost
+
+
+def full_data_coreset(ds: VFLDataset) -> Coreset:
+    """The identity coreset: every row once, weight 1, zero protocol cost.
+
+    ``fit_*`` on it IS the full-data solve (to fp tolerance) — the
+    baseline ``evaluate`` compares against, and the budget=n sanity anchor
+    of the solve layer."""
+    n = ds.n
+    return Coreset(jnp.arange(n), jnp.ones((n,), jnp.float32), 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class FitResult:
+    """One downstream solve on one coreset.
+
+    ``params`` is theta (d,) for ridge, centers (k, d) for k-means;
+    ``objective`` is the WEIGHTED objective on the coreset itself (what the
+    solver minimized — compare with :func:`evaluate` for the full-data
+    view).  ``lam``/``k`` carry the hyperparameter so ``evaluate`` can
+    recompute objectives without re-asking."""
+
+    task: str                     # "ridge" | "kmeans"
+    params: jax.Array
+    coreset: Coreset
+    objective: float
+    lam: Optional[float] = None
+    k: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalReport:
+    """The paper's relative-error ratio on the FULL data.
+
+    ``cost_fit`` — full-data objective at the coreset-fit parameters;
+    ``cost_opt`` — full-data objective at the baseline (full-data-fit)
+    parameters; ``rel_error = cost_fit / cost_opt - 1`` (>= 0 for the
+    closed-form ridge optimum up to fp; can be mildly negative for k-means,
+    where both solves are heuristic)."""
+
+    task: str
+    cost_fit: float
+    cost_opt: float
+    rel_error: float
+    m: int
+    n: int
+    comm_units: int
+
+
+def fit_ridge(
+    ds: VFLDataset,
+    cs: Coreset,
+    lam: float,
+    *,
+    ledger: Optional[CommLedger] = None,
+) -> FitResult:
+    """Closed-form weighted ridge on the coreset rows (Theorem 4.1's
+    downstream scheme): argmin_theta sum_{i in S} w_i (x_i^T theta - y_i)^2
+    + lam ||theta||^2."""
+    if ds.y is None:
+        raise ValueError("fit_ridge requires labels at party T")
+    XS, yS, w = cs.materialize(ds, ledger)
+    theta = ridge_closed_form(XS, yS, lam, w)
+    obj = float(ridge_cost(XS, yS, theta, lam, w))
+    return FitResult("ridge", theta, cs, obj, lam=float(lam))
+
+
+def fit_kmeans(
+    ds: VFLDataset,
+    cs: Coreset,
+    k: int,
+    *,
+    key: jax.Array,
+    iters: int = 25,
+    restarts: int = 1,
+    backend: str = "auto",
+    ledger: Optional[CommLedger] = None,
+) -> FitResult:
+    """Weighted k-means++ + Lloyd on the coreset rows (Theorem 5.2's
+    downstream scheme).  Each Lloyd iteration is ONE fused
+    ``kmeans_assign_update`` pass over the m coreset rows.  ``restarts``
+    re-seeds ``kmeans`` with ``fold_in(key, r)`` and keeps the centers with
+    the lowest WEIGHTED coreset objective — the only objective the server
+    can evaluate without touching the full data."""
+    if restarts < 1:
+        raise ValueError(f"restarts must be >= 1, got {restarts}")
+    use_kernel = resolve_backend(backend) == "pallas"
+    XS, _, w = cs.materialize(ds, ledger)
+    best, best_obj = None, float("inf")
+    for r in range(restarts):
+        centers = kmeans(jax.random.fold_in(key, r), XS, k, w, iters=iters,
+                         use_kernel=use_kernel)
+        obj = float(kmeans_cost(XS, centers, w, use_kernel=use_kernel))
+        if best is None or obj < best_obj:
+            best, best_obj = centers, obj
+    if not np.isfinite(best_obj):
+        raise ValueError(
+            f"every k-means restart produced a non-finite objective "
+            f"({best_obj}); the coreset rows or weights are degenerate"
+        )
+    return FitResult("kmeans", best, cs, best_obj, k=int(k))
+
+
+def evaluate(
+    ds: VFLDataset,
+    fit: FitResult,
+    *,
+    key: Optional[jax.Array] = None,
+    baseline: Optional[jax.Array] = None,
+    iters: int = 25,
+    restarts: int = 1,
+    backend: str = "auto",
+) -> EvalReport:
+    """Full-data relative error of a coreset fit (the paper's y-axis).
+
+    ``baseline`` (precomputed full-data parameters) short-circuits the
+    full-data solve — pass it when evaluating many coresets against one
+    baseline.  For k-means the baseline solve needs ``key`` (same restarts
+    policy as :func:`fit_kmeans`, on the identity coreset)."""
+    use_kernel = resolve_backend(backend) == "pallas"
+    X, y = ds.full(), ds.y
+    if fit.task == "ridge":
+        cost_fit = float(ridge_cost(X, y, fit.params, fit.lam))
+        if baseline is None:
+            baseline = ridge_closed_form(X, y, fit.lam)
+        cost_opt = float(ridge_cost(X, y, baseline, fit.lam))
+    elif fit.task == "kmeans":
+        cost_fit = float(kmeans_cost(X, fit.params, use_kernel=use_kernel))
+        if baseline is None:
+            if key is None:
+                raise ValueError(
+                    "evaluate needs `key` (or a precomputed `baseline`) for "
+                    "the full-data k-means baseline"
+                )
+            baseline = fit_kmeans(ds, full_data_coreset(ds), fit.k, key=key,
+                                  iters=iters, restarts=restarts,
+                                  backend=backend).params
+        cost_opt = float(kmeans_cost(X, baseline, use_kernel=use_kernel))
+    else:
+        raise ValueError(f"unknown fit task {fit.task!r}")
+    rel = cost_fit / max(cost_opt, 1e-30) - 1.0
+    return EvalReport(fit.task, cost_fit, cost_opt, rel,
+                      m=fit.coreset.m, n=ds.n,
+                      comm_units=fit.coreset.comm_units)
+
+
+def end_to_end(
+    spec: Union[CoresetSpec, str],
+    ds: VFLDataset,
+    *,
+    key: jax.Array,
+    lam: Optional[float] = None,
+    k: Optional[int] = None,
+    solve_key: Optional[jax.Array] = None,
+    baseline: Optional[jax.Array] = None,
+    iters: int = 25,
+    restarts: int = 1,
+    ledger: Optional[CommLedger] = None,
+):
+    """Spec -> coreset -> fit -> full-data evaluation, in one call.
+
+    ``spec`` may be a task name (compiled with spec defaults).  The solver
+    is chosen by the hyperparameter: pass ``lam`` for the ridge leg, ``k``
+    for the k-means leg (exactly one).  ``solve_key`` seeds the k-means
+    solve (defaults to ``fold_in(key, 1)``; the build consumes ``key``
+    itself, matching the examples' choreography).
+
+    Returns ``(coreset, FitResult, EvalReport)``.
+    """
+    if isinstance(spec, str):
+        spec = CoresetSpec(task=spec)
+    if spec.is_grid:
+        raise ValueError(
+            "end_to_end runs one construction; build grids with "
+            "CoresetPipeline.build and fit cells individually"
+        )
+    if (lam is None) == (k is None):
+        raise ValueError("pass exactly one of `lam` (ridge) or `k` (k-means)")
+    cs = CoresetPipeline(ds).build(spec, key=key, ledger=ledger)
+    if lam is not None:
+        fit = fit_ridge(ds, cs, lam, ledger=ledger)
+        rep = evaluate(ds, fit, baseline=baseline)
+    else:
+        sk = jax.random.fold_in(key, 1) if solve_key is None else solve_key
+        fit = fit_kmeans(ds, cs, k, key=sk, iters=iters, restarts=restarts,
+                         ledger=ledger)
+        rep = evaluate(ds, fit, key=sk, baseline=baseline, iters=iters,
+                       restarts=restarts)
+    return cs, fit, rep
+
+
+# Task-name -> default solver mapping used by examples/benchmarks: the
+# paper's pairing of construction (Alg 2/3) with downstream scheme A.
+DEFAULT_SOLVER = {"vrlr": "ridge", "vkmc": "kmeans", "uniform": None}
+
+
+def solver_for(task) -> Optional[str]:
+    """The canonical downstream solver for a task name (None = caller's
+    choice, e.g. the uniform baseline works with either)."""
+    name = get_task(task).name
+    return DEFAULT_SOLVER.get(name)

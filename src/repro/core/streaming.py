@@ -133,8 +133,14 @@ def make_stream_scorer(
     probe: Optional[Callable[[], None]] = None,
     chunk_blocks: int = 1,
     prefetch: bool = False,
+    masses: Optional[jax.Array] = None,
     **params,
 ) -> StreamScorer:
+    """Build the task's :class:`StreamScorer`.  ``masses`` (a precomputed
+    (T, nb) block-mass table, e.g. from :func:`vrlr_block_masses_sharded`)
+    skips the factory's own mass pass — the ``sharded_masses`` plan toggle:
+    round 1 samples from the supplied table while per-row scores still come
+    from the scorer's block recomputation."""
     factory = STREAM_SCORERS.get(name)
     if factory is None:
         raise ValueError(
@@ -142,7 +148,8 @@ def make_stream_scorer(
             f"available: {sorted(STREAM_SCORERS)}"
         )
     return factory(key, ds, block_size, backend, probe=probe,
-                   chunk_blocks=chunk_blocks, prefetch=prefetch, **params)
+                   chunk_blocks=chunk_blocks, prefetch=prefetch,
+                   masses=masses, **params)
 
 
 def _noop() -> None:
@@ -293,6 +300,7 @@ def vrlr_stream_scorer(
     key, ds: VFLDataset, block_size: int, backend: str,
     probe: Optional[Callable[[], None]] = None, rcond: float = 1e-6,
     chunk_blocks: int = 1, prefetch: bool = False,
+    masses: Optional[jax.Array] = None,
 ) -> StreamScorer:
     """Algorithm 2's scores without ever holding (n, d): one block-scan pass
     accumulates each party's (s, s) Gram, the eigen-pseudo-inverse is taken
@@ -323,13 +331,16 @@ def vrlr_stream_scorer(
                                               with_labels=True)
             return _norm_score_batch(batch, jnp.asarray(nvalids), float(n))
 
-        if pipelined:
-            masses = _chunked_mass_table(
-                ds, block_size, C, prefetch, probe, True,
-                lambda chunk, nv: _norm_mass_chunk(chunk, nv, float(n)))
+        if masses is None:
+            if pipelined:
+                masses = _chunked_mass_table(
+                    ds, block_size, C, prefetch, probe, True,
+                    lambda chunk, nv: _norm_mass_chunk(chunk, nv, float(n)))
+            else:
+                masses = _mass_table(ds, block_size, score_block, probe)
+            passes = 1
         else:
-            masses = _mass_table(ds, block_size, score_block, probe)
-        passes = 1
+            passes = 0
     else:
         G = jnp.zeros((ds.T, s, s), jnp.float32)
         if pipelined:
@@ -356,14 +367,17 @@ def vrlr_stream_scorer(
             return _vrlr_score_batch(batch, M, jnp.asarray(nvalids), float(n),
                                      use_kernel=use_kernel)
 
-        if pipelined:
-            masses = _chunked_mass_table(
-                ds, block_size, C, prefetch, probe, True,
-                lambda chunk, nv: _vrlr_mass_chunk(chunk, M, nv, float(n),
-                                                   use_kernel=use_kernel))
+        if masses is None:
+            if pipelined:
+                masses = _chunked_mass_table(
+                    ds, block_size, C, prefetch, probe, True,
+                    lambda chunk, nv: _vrlr_mass_chunk(chunk, M, nv, float(n),
+                                                       use_kernel=use_kernel))
+            else:
+                masses = _mass_table(ds, block_size, score_block, probe)
+            passes = 2
         else:
-            masses = _mass_table(ds, block_size, score_block, probe)
-        passes = 2
+            passes = 1           # the Gram pass still ran; the mass pass didn't
 
     return StreamScorer(T=ds.T, n=n, nb=nb, bs=bs, masses=masses,
                         dis_key=key, score_block=score_block,
@@ -499,6 +513,7 @@ def vkmc_stream_scorer(
     k: int = 10, alpha: float = 2.0, local_iters: int = 15,
     center_sample: int = 16384,
     chunk_blocks: int = 1, prefetch: bool = False,
+    masses: Optional[jax.Array] = None,
 ) -> StreamScorer:
     """Algorithm 3's sensitivities with only one superchunk resident.
 
@@ -530,15 +545,19 @@ def vkmc_stream_scorer(
                                               with_labels=False)
             return _norm_score_batch(batch, jnp.asarray(nvalids), float(n))
 
-        if pipelined:
-            masses = _chunked_mass_table(
-                ds, block_size, C, prefetch, probe, False,
-                lambda chunk, nv: _norm_mass_chunk(chunk, nv, float(n)))
+        if masses is None:
+            if pipelined:
+                masses = _chunked_mass_table(
+                    ds, block_size, C, prefetch, probe, False,
+                    lambda chunk, nv: _norm_mass_chunk(chunk, nv, float(n)))
+            else:
+                masses = _mass_table(ds, block_size, score_block, probe)
+            passes = 1
         else:
-            masses = _mass_table(ds, block_size, score_block, probe)
+            passes = 0
         return StreamScorer(T=T, n=n, nb=nb, bs=bs, masses=masses,
                             dis_key=dis_key, score_block=score_block,
-                            data_passes=1, score_blocks=score_blocks,
+                            data_passes=passes, score_blocks=score_blocks,
                             chunk_blocks=C)
 
     centers, dis_key = vkmc_local_centers(
@@ -574,17 +593,21 @@ def vkmc_stream_scorer(
                                  jnp.asarray(nvalids), float(alpha),
                                  use_kernel=use_kernel)
 
-    if pipelined:
-        masses = _chunked_mass_table(
-            ds, block_size, C, prefetch, probe, False,
-            lambda chunk, nv: _vkmc_mass_chunk(chunk, centers, csize, ccost,
-                                               nv, float(alpha),
-                                               use_kernel=use_kernel))
+    if masses is None:
+        if pipelined:
+            masses = _chunked_mass_table(
+                ds, block_size, C, prefetch, probe, False,
+                lambda chunk, nv: _vkmc_mass_chunk(chunk, centers, csize,
+                                                   ccost, nv, float(alpha),
+                                                   use_kernel=use_kernel))
+        else:
+            masses = _mass_table(ds, block_size, score_block, probe)
+        passes = 3
     else:
-        masses = _mass_table(ds, block_size, score_block, probe)
+        passes = 2               # centers + stats passes ran; masses supplied
     return StreamScorer(T=T, n=n, nb=nb, bs=bs, masses=masses,
                         dis_key=dis_key, score_block=score_block,
-                        data_passes=3, score_blocks=score_blocks,
+                        data_passes=passes, score_blocks=score_blocks,
                         chunk_blocks=C)
 
 
@@ -909,6 +932,7 @@ def vkmc_block_masses_sharded(
     mesh, ds: VFLDataset, block_size: int,
     *, key, k: int = 10, alpha: float = 2.0, local_iters: int = 15,
     center_sample: int = 16384, axis: str = "data",
+    use_kernel: bool = False,
 ):
     """VKMC block-mass table with rows sharded over ``axis`` — the mirror of
     :func:`vrlr_block_masses_sharded` for Algorithm 3.
@@ -919,8 +943,13 @@ def vkmc_block_masses_sharded(
     shard, and the GLOBAL per-party cluster size/cost table — VKMC's
     sufficient statistic, O(T k) scalars — is combined with ONE psum (the
     (T, 2k) stack of sizes and costs); scores follow locally and a second
-    psum unions the disjoint (T, nb) mass-table slices.  Returns the same
-    table as ``vkmc_stream_scorer(key, ...).masses`` up to fp reduction
+    psum unions the disjoint (T, nb) mass-table slices.  ``use_kernel``
+    MUST match the consuming scorer's backend: the centers come from an
+    iterated Lloyd solve whose fp accumulation order differs between the
+    Pallas kernels and the jnp refs, so a mismatch yields a mass table
+    built from *different centers* than the per-row scores the sampler
+    recomputes — not an fp-tolerance drift.  With it matched, the table
+    equals ``vkmc_stream_scorer(key, ...).masses`` up to fp reduction
     order.
     """
     from jax.experimental.shard_map import shard_map
@@ -934,12 +963,13 @@ def vkmc_block_masses_sharded(
     widths, s = ds.stacked_widths(with_labels=False)
     centers, _ = vkmc_local_centers(
         key, ds, k=k, local_iters=local_iters, center_sample=center_sample,
-        use_kernel=False)
+        use_kernel=use_kernel)
     blocks = _sharded_stacked(mesh, ds, widths, s, axis, with_labels=False)
+    assign_fn = kops.kmeans_assign if use_kernel else kref.kmeans_assign
 
     def _inner(blk):                                           # (T, n/D, s)
         f = blk.astype(jnp.float32)
-        assign, d2 = kref.kmeans_assign(f, centers)            # (T, n/D)
+        assign, d2 = assign_fn(f, centers)                     # (T, n/D)
         onehot = (assign[..., None] ==
                   jnp.arange(k)[None, None, :]).astype(jnp.float32)
         stats_loc = jnp.concatenate(

@@ -1,0 +1,132 @@
+"""Downstream solve layer: fit_ridge / fit_kmeans / evaluate / end_to_end.
+
+Pins the solve-layer acceptance criteria:
+  * ``fit_ridge`` / ``fit_kmeans`` on the IDENTITY coreset (budget = n,
+    weight 1) match the full-data solve to fp tolerance;
+  * ``evaluate`` returns the paper's relative-error ratio and is ~0 for the
+    identity coreset, small for a real coreset at a healthy budget;
+  * ``end_to_end`` composes spec -> build -> fit -> evaluate, with the
+    Theorem 2.5 ledger composition available throughout.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CommLedger,
+    CoresetSpec,
+    VFLDataset,
+    end_to_end,
+    evaluate,
+    fit_kmeans,
+    fit_ridge,
+    full_data_coreset,
+    ridge_closed_form,
+    solver_for,
+)
+from repro.core.vkmc import kmeans
+
+
+def _dataset(key, n=2000, d=12, T=3):
+    kx, kt, kn = jax.random.split(key, 3)
+    X = jax.random.normal(kx, (n, d))
+    theta = jax.random.normal(kt, (d,))
+    y = X @ theta + 0.1 * jax.random.normal(kn, (n,))
+    return VFLDataset.from_dense(X, y, T=T)
+
+
+def test_fit_ridge_identity_matches_full_solve():
+    ds = _dataset(jax.random.PRNGKey(0))
+    lam = 0.1 * ds.n
+    fit = fit_ridge(ds, full_data_coreset(ds), lam)
+    theta_full = ridge_closed_form(ds.full(), ds.y, lam)
+    np.testing.assert_allclose(np.asarray(fit.params),
+                               np.asarray(theta_full), rtol=1e-5, atol=1e-6)
+    rep = evaluate(ds, fit)
+    assert abs(rep.rel_error) < 1e-5
+    assert rep.m == ds.n and rep.comm_units == 0
+
+
+def test_fit_kmeans_identity_matches_full_solve():
+    ds = _dataset(jax.random.PRNGKey(1), n=800)
+    k, key = 4, jax.random.PRNGKey(2)
+    fit = fit_kmeans(ds, full_data_coreset(ds), k, key=key)
+    # restart r=0 seeds with fold_in(key, 0) on the full rows, unit weights
+    direct = kmeans(jax.random.fold_in(key, 0), ds.full(), k,
+                    jnp.ones((ds.n,)), use_kernel=False)
+    np.testing.assert_allclose(np.asarray(fit.params), np.asarray(direct),
+                               rtol=1e-5, atol=1e-5)
+    rep = evaluate(ds, fit, key=key)
+    assert abs(rep.rel_error) < 1e-6        # same key chain -> same baseline
+
+
+def test_evaluate_real_coreset_small_error():
+    ds = _dataset(jax.random.PRNGKey(3), n=4000)
+    lam = 0.1 * ds.n
+    cs, fit, rep = end_to_end(CoresetSpec(task="vrlr", budgets=1000), ds,
+                              key=jax.random.PRNGKey(4), lam=lam)
+    assert cs.m == 1000 and fit.task == "ridge"
+    assert -1e-6 <= rep.rel_error < 0.25    # closed form: >= optimum, close
+    assert rep.cost_opt > 0 and rep.n == ds.n
+
+
+def test_end_to_end_kmeans_leg():
+    ds = _dataset(jax.random.PRNGKey(5), n=1500)
+    cs, fit, rep = end_to_end(
+        CoresetSpec(task="vkmc", budgets=500, params={"k": 4}), ds,
+        key=jax.random.PRNGKey(6), k=4, restarts=2)
+    assert fit.task == "kmeans" and fit.params.shape == (4, ds.d)
+    assert rep.rel_error < 0.5              # heuristic; may be mildly < 0
+
+
+def test_end_to_end_validates_solver_choice():
+    ds = _dataset(jax.random.PRNGKey(7), n=300)
+    with pytest.raises(ValueError, match="exactly one"):
+        end_to_end("vrlr", ds, key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="exactly one"):
+        end_to_end("vrlr", ds, key=jax.random.PRNGKey(0), lam=1.0, k=3)
+    with pytest.raises(ValueError, match="grid"):
+        end_to_end(CoresetSpec(task="vrlr", budgets=(10, 20)), ds,
+                   key=jax.random.PRNGKey(0), lam=1.0)
+
+
+def test_fit_ledger_composition():
+    """fit_* records Theorem 2.5's +2mT materialization on the ledger."""
+    ds = _dataset(jax.random.PRNGKey(8), n=600)
+    led = CommLedger()
+    cs, _, _ = end_to_end(CoresetSpec(task="vrlr", budgets=50), ds,
+                          key=jax.random.PRNGKey(9), lam=10.0, ledger=led)
+    assert led.total == cs.comm_units + 2 * 50 * ds.T
+    assert led.by_prefix("materialize/") == 2 * 50 * ds.T
+
+
+def test_fit_validation_errors():
+    ds = _dataset(jax.random.PRNGKey(10), n=300)
+    unlabeled = VFLDataset(ds.parts, None)
+    with pytest.raises(ValueError, match="labels"):
+        fit_ridge(unlabeled, full_data_coreset(unlabeled), 1.0)
+    with pytest.raises(ValueError, match="restarts"):
+        fit_kmeans(ds, full_data_coreset(ds), 3, key=jax.random.PRNGKey(0),
+                   restarts=0)
+    fit = fit_kmeans(ds, full_data_coreset(ds), 3, key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="key"):
+        evaluate(ds, fit)                   # k-means baseline needs a key
+
+
+def test_solver_for_mapping():
+    assert solver_for("vrlr") == "ridge"
+    assert solver_for("vkmc") == "kmeans"
+    assert solver_for("uniform") is None
+
+
+def test_uniform_coreset_through_solve_layer():
+    """The U-* baseline composes with both solvers (the paper's U-CENTRAL /
+    U-KMEANS++ columns)."""
+    ds = _dataset(jax.random.PRNGKey(11), n=2000)
+    lam = 0.1 * ds.n
+    cs, fit, rep = end_to_end(CoresetSpec(task="uniform", budgets=800), ds,
+                              key=jax.random.PRNGKey(12), lam=lam)
+    assert cs.comm_units == 800 * ds.T      # broadcast-only bill
+    assert rep.rel_error < 0.5

@@ -39,6 +39,7 @@ MODULES = [
     "fused_lloyd",      # fused vs seed Lloyd step: passes-over-X + us/step
     "streaming",        # streaming vs materialized: rows/sec + peak bytes
     "e2e",              # spec-build + downstream fit: wall time + rel error
+    "serve",            # online service: tenant latency + tree-vs-flat quality
     "selector_step",    # beyond-paper: LLM coreset batch selection
     "assumption_sweep",  # beyond-paper: Assumption 4.1/5.1 violation sweep
 ]

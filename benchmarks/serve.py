@@ -1,0 +1,253 @@
+"""Online coreset service benchmark: multi-tenant latency + tree quality.
+
+Two experiments, recorded under the ``serve`` section of BENCH_kernels.json:
+
+* ``workload`` — R tenants stream superchunks into one
+  :class:`~repro.serve.service.CoresetService` round-robin, querying as
+  they go: p50/p99 insert and query latency, sustained requests/s, and the
+  cold/warm split — the FIRST tenant pays plan compilation + jit, later
+  tenants hit the shared plan cache (same shapes => warm compiled
+  programs).  The ``warm_speedup >= 3`` assertion is the serving-layer
+  acceptance gate: if the plan cache stops translating into warm latency,
+  this benchmark fails instead of silently recording a regression.
+
+* ``rel_error`` — merge-and-reduce quality: a height-h tree's reduced
+  query vs the flat equal-budget batch build on the SAME stream, full-data
+  relative error averaged over seeds, for vrlr AND vkmc (vkmc against the
+  best-known-centers baseline, the e2e benchmark's basin-roulette
+  protection).  The tree runs at its default ``headroom=2`` (nodes keep
+  2m rows; only the final query reduce comes down to m — the variance
+  control that keeps a height-h tree near the flat build).  Gate: tree
+  within 2x of flat (plus a small absolute floor for the regime where
+  both errors are ~1e-3 noise).  ``--full`` runs the paper-scale n = 1e5
+  acceptance; fast mode is the same experiment at n = 2e4 (CI's smoke).
+
+  PYTHONPATH=src python -m benchmarks.serve --fast
+  PYTHONPATH=src python -m benchmarks.run --sections serve
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import write_bench_json, write_rows
+from repro.core import VFLDataset, build_coreset
+from repro.core.solve import evaluate, fit_kmeans, fit_ridge, full_data_coreset
+from repro.serve import CoresetService, CoresetTree
+
+BENCH = "serve"
+SECTION = "serve"
+
+WARM_SPEEDUP_GATE = 3.0      # warm query must beat the cold query by >= 3x
+TREE_VS_FLAT_GATE = 2.0      # tree rel_error within 2x of the flat build
+REL_FLOOR = 0.02             # both-tiny regime: absolute floor on the gate
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def _chunk_stream(seed, num, rows, d, T, labels):
+    """num superchunks of one synthetic stream (cluster + linear structure,
+    the e2e generator's recipe) as per-party host arrays."""
+    rng = np.random.default_rng(seed)
+    k_clusters = 8
+    centers = 2.0 * rng.standard_normal((k_clusters, d)).astype(np.float32)
+    theta = rng.standard_normal(d).astype(np.float32)
+    base, rem = divmod(d, T)
+    widths = [base + (1 if j < rem else 0) for j in range(T)]
+    chunks = []
+    for _ in range(num):
+        X = (centers[rng.integers(0, k_clusters, rows)]
+             + rng.standard_normal((rows, d)).astype(np.float32))
+        y = (X @ theta + 0.1 * rng.standard_normal(rows).astype(np.float32)
+             if labels else None)
+        parts, start = [], 0
+        for w in widths:
+            parts.append(X[:, start:start + w])
+            start += w
+        chunks.append((parts, y))
+    return chunks
+
+
+def _stream_ds(chunks):
+    T = len(chunks[0][0])
+    parts = [np.concatenate([c[0][j] for c in chunks]) for j in range(T)]
+    y = (None if chunks[0][1] is None
+         else np.concatenate([c[1] for c in chunks]))
+    return VFLDataset(parts, y)
+
+
+# --------------------------------------------------------------------------
+# Experiment 1: multi-tenant workload latency
+# --------------------------------------------------------------------------
+
+def run_workload(fast: bool):
+    tenants = 3 if fast else 6
+    num_chunks = 4 if fast else 8
+    rows = 4000 if fast else 12500
+    m, d, T = 256, 12, 3
+
+    svc = CoresetService()
+    streams = {}
+    for i in range(tenants):
+        name = f"tenant{i}"
+        svc.register(name, task="vrlr", budget=m, seed=i, block_size=2048)
+        streams[name] = _chunk_stream(100 + i, num_chunks, rows, d, T, True)
+
+    insert_ms, query_ms = [], []
+    cold_query_ms = warm = None
+    t_start = time.time()
+    requests = 0
+    for r in range(num_chunks):
+        for i in range(tenants):
+            name = f"tenant{i}"
+            parts, y = streams[name][r]
+            rec = svc.insert(name, parts, y)
+            insert_ms.append(rec.latency_s * 1e3)
+            requests += 1
+            q = svc.query(name, reduce_to=m)
+            query_ms.append(q.latency_s * 1e3)
+            requests += 1
+            if cold_query_ms is None:
+                cold_query_ms = q.latency_s * 1e3   # tenant0, round 0: pays jit
+    wall = time.time() - t_start
+
+    # warm = typical steady-state query (everything past the first round)
+    warm_query_ms = _pct(query_ms[tenants:], 50)
+    warm_speedup = cold_query_ms / max(warm_query_ms, 1e-9)
+    stats = svc.stats()
+    entry = {
+        "kind": "workload", "tenants": tenants, "chunks": num_chunks,
+        "chunk_rows": rows, "m": m, "d": d, "T": T,
+        "insert_p50_ms": round(_pct(insert_ms, 50), 3),
+        "insert_p99_ms": round(_pct(insert_ms, 99), 3),
+        "query_p50_ms": round(_pct(query_ms, 50), 3),
+        "query_p99_ms": round(_pct(query_ms, 99), 3),
+        "requests_per_s": round(requests / wall, 2),
+        "cold_query_ms": round(cold_query_ms, 3),
+        "warm_query_ms": round(warm_query_ms, 3),
+        "warm_speedup": round(warm_speedup, 2),
+        "plan_hits": stats["plan_hits"], "plan_misses": stats["plan_misses"],
+    }
+    if not warm_speedup >= WARM_SPEEDUP_GATE:
+        raise AssertionError(
+            f"warm query {warm_query_ms:.1f}ms is only "
+            f"{warm_speedup:.1f}x better than cold {cold_query_ms:.1f}ms "
+            f"(gate {WARM_SPEEDUP_GATE}x) — the plan cache stopped paying")
+    row = {"bench": BENCH, "method": f"workload-{tenants}t",
+           "size": tenants * num_chunks * rows,
+           "cost_mean": round(_pct(query_ms, 50), 3),
+           "cost_std": round(_pct(query_ms, 99), 3),
+           "comm": sum(svc.state(t).ledger.total for t in svc.tenants()),
+           "wall_s": round(wall, 2)}
+    return entry, row
+
+
+# --------------------------------------------------------------------------
+# Experiment 2: merge-and-reduce quality vs the flat build
+# --------------------------------------------------------------------------
+
+def run_rel_error(fast: bool, task: str):
+    n = 20_000 if fast else 100_000
+    num_chunks = 8
+    rows = n // num_chunks
+    m = 512 if fast else 2048
+    d, T, k = 30, 3, 8
+    seeds = 3
+    labels = task == "vrlr"
+    params = {} if labels else {"k": k}
+
+    chunks = _chunk_stream(3, num_chunks, rows, d, T, labels)
+    stream = _stream_ds(chunks)
+    lam = 0.1 * n
+
+    if labels:
+        baseline = fit_ridge(stream, full_data_coreset(stream), lam).params
+    else:
+        baseline = fit_kmeans(stream, full_data_coreset(stream), k,
+                              key=jax.random.PRNGKey(99), restarts=5,
+                              backend="ref").params
+
+    def rel(cs, seed):
+        if labels:
+            rep = evaluate(stream, fit_ridge(stream, cs, lam),
+                           baseline=baseline)
+            return max(rep.rel_error, 0.0)
+        # k-means: the coreset fit itself is basin roulette (the weighted
+        # objective that picks the best restart can mis-rank on full data),
+        # so take the best of two independent fit seedings — this measures
+        # CORESET quality, not Lloyd's luck, and applies equally to the
+        # tree and the flat build.  Baseline = best-known centers (e2e).
+        rels = []
+        for t in range(2):
+            fit = fit_kmeans(stream, cs, k,
+                             key=jax.random.PRNGKey(1000 + seed + 7919 * t),
+                             restarts=5, backend="ref")
+            rep0 = evaluate(stream, fit, baseline=baseline)
+            best = baseline if rep0.rel_error >= 0 else fit.params
+            rels.append(max(evaluate(stream, fit, baseline=best).rel_error,
+                            0.0))
+        return min(rels)
+
+    r_tree, r_flat, build_s = [], [], 0.0
+    for s in range(seeds):
+        tree = CoresetTree(task, m, key=jax.random.PRNGKey(s),
+                           block_size=4096, params=params)
+        t0 = time.time()
+        for parts, y in chunks:
+            tree.insert(parts, y)
+        q = tree.query(reduce_to=m)
+        build_s += time.time() - t0
+        r_tree.append(rel(q.coreset(), s))
+        flat = build_coreset(task, stream, m, key=jax.random.PRNGKey(50 + s),
+                             backend="ref", **params)
+        r_flat.append(rel(flat, s))
+    mean_tree, mean_flat = float(np.mean(r_tree)), float(np.mean(r_flat))
+    ratio = mean_tree / max(mean_flat, 1e-12)
+
+    gate = max(TREE_VS_FLAT_GATE * mean_flat, REL_FLOOR)
+    if not mean_tree <= gate:
+        raise AssertionError(
+            f"{task}: tree rel_error {mean_tree:.4f} exceeds "
+            f"max({TREE_VS_FLAT_GATE}x flat {mean_flat:.4f}, {REL_FLOOR}) "
+            f"(n={n}, m={m}, {num_chunks} chunks, {seeds} seeds)")
+    entry = {
+        "kind": "rel_error", "task": task, "n": n, "m": m,
+        "chunks": num_chunks, "seeds": seeds,
+        "rel_tree": round(mean_tree, 6), "rel_flat": round(mean_flat, 6),
+        "ratio_vs_flat": round(ratio, 3),
+        "tree_build_s": round(build_s / seeds, 3),
+    }
+    row = {"bench": BENCH, "method": f"tree-vs-flat-{task}", "size": n,
+           "cost_mean": round(mean_tree, 6),
+           "cost_std": round(float(np.std(r_tree)), 6),
+           "comm": 0, "wall_s": round(build_s / seeds, 3)}
+    return entry, row
+
+
+def run(fast: bool = True):
+    entries, rows = [], []
+    e, r = run_workload(fast)
+    entries.append(e)
+    rows.append(r)
+    for task in ("vrlr", "vkmc"):
+        e, r = run_rel_error(fast, task)
+        entries.append(e)
+        rows.append(r)
+    write_rows(BENCH, rows)
+    write_bench_json(SECTION, entries)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true", default=True)
+    ap.add_argument("--full", dest="fast", action="store_false")
+    args = ap.parse_args()
+    for r in run(fast=args.fast):
+        print(r)

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs import all_arch_names, get_arch
 from repro.models import init_params
-from repro.serve import ServeEngine
+from repro.models.lm_serve import ServeEngine
 
 
 def main() -> None:

@@ -2,7 +2,8 @@
 construction for vertical federated learning.
 
 Public API:
-  CoresetSpec, ExecutionPlan, compile_plan, ENGINES       (plan — declarative spec
+  CoresetSpec, ExecutionPlan, compile_plan, ENGINES,
+  PlanCache                                               (plan — declarative spec
                                                            + auto-planner)
   CoresetPipeline, build_coreset, build_coreset_jit,
   build_coresets_batched, build_coreset_streaming,
@@ -19,7 +20,8 @@ Public API:
   dis_plan_streamed_batched, vkmc_local_centers,
   vrlr_block_masses_sharded, vkmc_block_masses_sharded    (streaming — block-scan n)
   vrlr_local_scores, vkmc_local_scores, ...               (sensitivity — Alg 2/3 local)
-  Coreset, vrlr_coreset_ratio, vkmc_coreset_ratio         (coreset)
+  Coreset, MaterializedCoreset,
+  vrlr_coreset_ratio, vkmc_coreset_ratio                  (coreset)
   ridge_closed_form, fista, saga_ridge, solve             (vrlr solvers)
   kmeans, kmeans_plusplus, lloyd, distdim, ...            (vkmc solvers)
   SelectorConfig, make_mesh_selector                      (selector — LLM integration)
@@ -52,6 +54,7 @@ from repro.core.plan import (
     ENGINES,
     CoresetSpec,
     ExecutionPlan,
+    PlanCache,
     compile_plan,
     memory_model,
 )
@@ -66,7 +69,12 @@ from repro.core.solve import (
     solver_for,
 )
 from repro.core.comm import CommLedger, CommSchedule, theoretical_dis_cost
-from repro.core.coreset import Coreset, vkmc_coreset_ratio, vrlr_coreset_ratio
+from repro.core.coreset import (
+    Coreset,
+    MaterializedCoreset,
+    vkmc_coreset_ratio,
+    vrlr_coreset_ratio,
+)
 from repro.core.dis import (
     blocked_geometry,
     dis_blocked_marginals,

@@ -52,6 +52,7 @@ from repro.core.plan import (
     SCORE_BACKENDS,
     CoresetSpec,
     ExecutionPlan,
+    PlanCache,
     compile_plan,
 )
 from repro.core.sensitivity import (
@@ -497,11 +498,20 @@ class CoresetPipeline:
     accepts a pre-compiled plan so introspect-then-run costs one
     compilation.  A forced-engine spec reproduces the corresponding legacy
     entry point draw for draw — the legacy functions ARE such specs.
+
+    ``plan_cache`` (a :class:`~repro.core.plan.PlanCache`) memoizes
+    ``plan(spec)`` by ``(task, geometry, knobs)`` — the serving layer's
+    seam: one cache shared across tenants makes repeat shapes skip
+    compilation (the same signature also keys the executors' jit caches,
+    so a hit implies the engine's compiled programs are warm too).
     """
 
     ds: VFLDataset
+    plan_cache: Optional[PlanCache] = None
 
     def plan(self, spec: CoresetSpec) -> ExecutionPlan:
+        if self.plan_cache is not None:
+            return self.plan_cache.get(spec, self.ds)
         return compile_plan(spec, self.ds)
 
     def build(

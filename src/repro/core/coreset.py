@@ -9,10 +9,11 @@ entry points survive as deprecation shims in :mod:`repro.core`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.comm import CommLedger, CommSchedule
 from repro.core.vfl import VFLDataset
@@ -49,6 +50,86 @@ class Coreset:
         CommSchedule.materialize(ds.T, self.m).record(ledger)
         sub = ds.rows(self.indices)
         return sub.full(), sub.y, self.weights
+
+
+@dataclasses.dataclass
+class MaterializedCoreset:
+    """A coreset together with its (host-resident) rows — the unit of state
+    a long-lived serving layer keeps after the source rows are gone.
+
+    An index :class:`Coreset` only points into a live :class:`VFLDataset`;
+    a merge-and-reduce tree (:mod:`repro.serve.tree`) must instead retain
+    the m selected rows themselves (per party, numpy, host memory) so later
+    merges can re-score them without the original data.  ``indices`` stay
+    GLOBAL row ids into the full stream, so the result still evaluates
+    against the full dataset; ``comm_units`` is the protocol cost that
+    produced this node (Thm 2.5-composed across merges).
+    """
+
+    indices: np.ndarray                 # (m,) int — global row ids
+    weights: np.ndarray                 # (m,) float
+    parts: List[np.ndarray]             # party j's selected rows (m, d_j)
+    y: Optional[np.ndarray] = None      # (m,), when the task carries labels
+    comm_units: int = 0
+
+    @property
+    def m(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def T(self) -> int:
+        return len(self.parts)
+
+    def dataset(self) -> VFLDataset:
+        """The rows as a (numpy-backed, host-resident) VFLDataset — what a
+        merge re-scores, or a downstream solver fits on."""
+        return VFLDataset(list(self.parts), self.y)
+
+    def coreset(self) -> Coreset:
+        """The index/weight view (global ids) for ledger-free evaluation
+        against the full dataset."""
+        return Coreset(jnp.asarray(self.indices), jnp.asarray(self.weights),
+                       self.comm_units)
+
+    @staticmethod
+    def from_coreset(
+        cs: Coreset, ds: VFLDataset, offset: int = 0
+    ) -> "MaterializedCoreset":
+        """Materialize ``cs``'s rows out of ``ds`` host-side.  ``offset``
+        shifts the (ds-local) indices into the global row space — the leaf
+        case of the merge-and-reduce tree, where ``ds`` is one arriving
+        superchunk starting at global row ``offset``."""
+        idx = np.asarray(cs.indices)
+        y = None if ds.y is None else np.asarray(ds.y)[idx]
+        return MaterializedCoreset(
+            indices=idx + int(offset),
+            weights=np.asarray(cs.weights),
+            parts=[np.asarray(p)[idx] for p in ds.parts],
+            y=y,
+            comm_units=int(cs.comm_units),
+        )
+
+    @staticmethod
+    def concat(mats: List["MaterializedCoreset"]) -> "MaterializedCoreset":
+        """The weighted union of several materialized coresets (rows and
+        weights concatenated; no re-sampling, no protocol cost — union is
+        server-side bookkeeping).  ``comm_units`` sums the children's."""
+        if not mats:
+            raise ValueError("concat needs at least one coreset")
+        T = mats[0].T
+        if any(m.T != T for m in mats):
+            raise ValueError("party counts differ across coresets")
+        has_y = mats[0].y is not None
+        if any((m.y is not None) != has_y for m in mats):
+            raise ValueError("label presence differs across coresets")
+        return MaterializedCoreset(
+            indices=np.concatenate([m.indices for m in mats]),
+            weights=np.concatenate([m.weights for m in mats]),
+            parts=[np.concatenate([m.parts[j] for m in mats])
+                   for j in range(T)],
+            y=np.concatenate([m.y for m in mats]) if has_y else None,
+            comm_units=sum(m.comm_units for m in mats),
+        )
 
 
 # --------------------------------------------------------------------------

@@ -32,7 +32,7 @@ from repro.launch.inputs import cache_specs, input_specs, prefill_specs, state_s
 from repro.launch.mesh import dp_axes, make_production_mesh
 from repro.models import api as model_api
 from repro.optim.schedules import constant
-from repro.serve.engine import make_serve_step
+from repro.models.lm_serve import make_serve_step
 from repro.sharding.ctx import ShardingCtx, set_ctx
 from repro.sharding.specs import batch_shardings, cache_shardings, param_shardings
 from repro.train.trainer import make_train_step

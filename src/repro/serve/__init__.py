@@ -1,3 +1,37 @@
-from repro.serve.engine import ServeEngine, make_serve_step
+"""Online coreset service: merge-and-reduce tree + multi-tenant serving.
 
-__all__ = ["ServeEngine", "make_serve_step"]
+  * :mod:`repro.serve.tree` — :class:`CoresetTree`: merge-and-reduce
+    maintenance of one task's coreset over a row stream (pipelined-engine
+    leaves, weighted-union DIS merges, exact composed ledger).
+  * :mod:`repro.serve.service` — :class:`CoresetService`: many tenants,
+    one shared plan cache, cross-tenant batching of one-shot builds.
+
+(The seed's language-model ``ServeEngine`` now lives in
+:mod:`repro.models.lm_serve`; it is re-exported here — deprecated — so old
+imports keep working.)
+"""
+
+from repro.models.lm_serve import ServeEngine, make_serve_step   # deprecated
+from repro.serve.service import (
+    CoresetService,
+    EvictReceipt,
+    InsertReceipt,
+    QueryReceipt,
+    TenantState,
+)
+from repro.serve.tree import CoresetTree, InsertStats, TreeNode, merge_reduce
+
+__all__ = [
+    "CoresetTree",
+    "TreeNode",
+    "InsertStats",
+    "merge_reduce",
+    "CoresetService",
+    "TenantState",
+    "InsertReceipt",
+    "QueryReceipt",
+    "EvictReceipt",
+    # deprecated LM re-exports
+    "ServeEngine",
+    "make_serve_step",
+]

@@ -1,79 +1,12 @@
-"""Batched serving engine: prefill + greedy/temperature decode over the
-family-dispatched ``decode_step``.
+"""Deprecated location: the LM decode engine moved to
+:mod:`repro.models.lm_serve`.
 
-``make_serve_step`` is the jit/pjit unit the dry-run lowers for the decode
-shapes: ONE token against a standing cache of ``cache_len``.
+``repro.serve`` is the coreset service namespace (merge-and-reduce tree +
+multi-tenant serving layer); the seed's language-model ``ServeEngine`` was
+never about coresets.  This module stays as a re-export so existing imports
+(``tests/test_serve.py``, old scripts) keep working.
 """
 
-from __future__ import annotations
+from repro.models.lm_serve import ServeEngine, make_serve_step
 
-import dataclasses
-from typing import Any, Dict, Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import ArchConfig
-from repro.models import api as model_api
-
-
-def make_serve_step(cfg: ArchConfig):
-    """serve_step(params, cache, tokens (B,1)) -> (logits (B,1,V), cache)."""
-
-    def serve_step(params, cache, tokens):
-        return model_api.decode_step(params, cfg, cache, tokens)
-
-    return serve_step
-
-
-@dataclasses.dataclass
-class ServeEngine:
-    """Minimal batched engine for the examples: greedy/temperature sampling.
-
-    Prefill runs token-by-token through ``decode_step`` (exact; fine at
-    example scale — production prefill would lower the chunked forward).
-    """
-
-    cfg: ArchConfig
-    params: Any
-    cache_len: int = 4096
-
-    def __post_init__(self) -> None:
-        self._step = jax.jit(make_serve_step(self.cfg))
-
-    def generate(
-        self,
-        prompts: jax.Array,                # (B, P) int32
-        max_new_tokens: int = 32,
-        temperature: float = 0.0,
-        key: Optional[jax.Array] = None,
-        prefix_embeds: Optional[jax.Array] = None,   # encdec/vlm stub inputs
-    ) -> jax.Array:
-        B, P = prompts.shape
-        cache = model_api.init_cache(self.cfg, B, self.cache_len)
-        if self.cfg.kind == "encdec":
-            from repro.models import encdec
-            assert prefix_embeds is not None, "encdec needs frame embeddings"
-            cache = encdec.prefill_cross(self.params, self.cfg, cache, prefix_embeds)
-        # prefill
-        logits = None
-        for t in range(P):
-            logits, cache = self._step(self.params, cache, prompts[:, t : t + 1])
-        # decode
-        out = []
-        tok = self._sample(logits, temperature, key, 0)
-        for i in range(max_new_tokens):
-            out.append(tok)
-            logits, cache = self._step(self.params, cache, tok)
-            key = None if key is None else jax.random.fold_in(key, i)
-            tok = self._sample(logits, temperature, key, i + 1)
-        return jnp.concatenate(out, axis=1)            # (B, max_new_tokens)
-
-    @staticmethod
-    def _sample(logits, temperature, key, i):
-        last = logits[:, -1, :]
-        if temperature <= 0.0 or key is None:
-            return jnp.argmax(last, axis=-1, keepdims=True).astype(jnp.int32)
-        return jax.random.categorical(
-            jax.random.fold_in(key, 7919 + i), last / temperature, axis=-1
-        )[:, None].astype(jnp.int32)
+__all__ = ["ServeEngine", "make_serve_step"]

@@ -1,0 +1,296 @@
+"""Multi-tenant coreset service: long-lived trees, a shared plan cache, and
+cross-tenant request batching.
+
+One :class:`CoresetService` process serves many tenants (one VFL federation
+each).  Three things make it a SERVICE rather than a loop over
+:class:`~repro.serve.tree.CoresetTree`:
+
+  * **Plan cache** — every tenant's leaf builds plan through one shared
+    :class:`~repro.core.plan.PlanCache` keyed on
+    ``(task, shapes, resolved knobs)``.  Since jit caches key on the same
+    shapes, a plan hit means the compiled scan programs are already warm:
+    the FIRST tenant at a given (chunk shape, task, knobs) pays
+    compilation, every later tenant streams at steady-state throughput
+    (the warm/cold gap is what ``benchmarks/serve.py`` measures).
+  * **Per-tenant state** — each tenant owns a tree, a ledger, and a
+    deterministic key chain seeded at registration; the same registration +
+    insert sequence replays the same draws regardless of what other
+    tenants do (pinned in ``tests/test_serve_service.py``).
+  * **Cross-tenant batching** — one-shot build requests against shared
+    reference datasets (``attach_dataset`` / ``submit`` / ``flush``) are
+    grouped by ``(dataset, task, backend, params)`` and executed as ONE
+    ``build_coresets_batched`` grid per group — R tenants' requests cost
+    one compiled dispatch instead of R.
+
+All receipts carry wall latency and the tenant's ledger total so the
+harness can report p50/p99 and verify composed accounting externally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.core.api import CoresetTask, build_coresets_batched, get_task
+from repro.core.comm import CommLedger
+from repro.core.coreset import Coreset, MaterializedCoreset
+from repro.core.plan import PlanCache
+from repro.core.vfl import VFLDataset
+from repro.serve.tree import CoresetTree, InsertStats
+
+
+@dataclasses.dataclass(frozen=True)
+class InsertReceipt:
+    tenant: str
+    chunk_idx: int              # 0-based index of this chunk in the stream
+    stats: InsertStats
+    ledger_total: int           # tenant's composed comm bill after the insert
+    plan_hit: bool              # leaf build reused a cached ExecutionPlan
+    latency_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryReceipt:
+    tenant: str
+    result: MaterializedCoreset
+    m: int
+    ledger_total: int
+    latency_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class EvictReceipt:
+    tenant: str
+    chunks: int
+    rows: int
+    ledger_total: int           # final composed bill at eviction
+
+
+@dataclasses.dataclass
+class TenantState:
+    """Everything the service holds for one federation."""
+
+    name: str
+    tree: CoresetTree
+    inserts: int = 0
+    queries: int = 0
+
+    @property
+    def ledger(self) -> CommLedger:
+        return self.tree.ledger
+
+
+@dataclasses.dataclass(frozen=True)
+class _BuildRequest:
+    ticket: int
+    tenant: str
+    dataset: str
+    task: str
+    m: int
+    key: jax.Array
+    params: Tuple[Tuple[str, Any], ...]
+
+
+class CoresetService:
+    """The long-lived serving layer.
+
+    Streaming path: ``register`` a tenant (task, budget, seed), ``insert``
+    superchunks as they arrive, ``query`` the current summary, ``evict``
+    when the federation leaves.  Batch path: ``attach_dataset`` shared
+    reference data, ``submit`` one-shot build requests from any tenants,
+    ``flush`` to execute each compatible group as a single batched-engine
+    dispatch.
+    """
+
+    def __init__(self, *, backend: str = "auto",
+                 plan_cache: Optional[PlanCache] = None) -> None:
+        self.backend = backend
+        self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
+        self._tenants: Dict[str, TenantState] = {}
+        self._datasets: Dict[str, VFLDataset] = {}
+        self._pending: List[_BuildRequest] = []
+        self._next_ticket = 0
+        self.batched_flushes = 0
+        self.batched_cells = 0
+
+    # -- tenant lifecycle ----------------------------------------------------
+
+    def register(
+        self,
+        tenant: str,
+        *,
+        task: Union[str, CoresetTask] = "vrlr",
+        budget: int = 512,
+        seed: int = 0,
+        key: Optional[jax.Array] = None,
+        block_size: int = 65536,
+        chunk_blocks: Optional[int] = None,
+        prefetch: Optional[bool] = None,
+        headroom: int = 2,
+        **params: Any,
+    ) -> TenantState:
+        """Create a tenant: its tree, ledger, and key chain.  Deterministic —
+        the same (seed/key, insert sequence) replays the same coresets."""
+        if tenant in self._tenants:
+            raise ValueError(f"tenant {tenant!r} already registered")
+        if key is None:
+            key = jax.random.PRNGKey(seed)
+        tree = CoresetTree(
+            task, budget, key=key, backend=self.backend,
+            block_size=block_size, chunk_blocks=chunk_blocks,
+            prefetch=prefetch, params=params, plan_cache=self.plan_cache,
+            headroom=headroom,
+        )
+        state = TenantState(name=tenant, tree=tree)
+        self._tenants[tenant] = state
+        return state
+
+    def tenants(self) -> List[str]:
+        return sorted(self._tenants)
+
+    def state(self, tenant: str) -> TenantState:
+        try:
+            return self._tenants[tenant]
+        except KeyError:
+            raise KeyError(f"unknown tenant {tenant!r}; "
+                           f"registered: {self.tenants()}") from None
+
+    def evict(self, tenant: str) -> EvictReceipt:
+        st = self.state(tenant)
+        del self._tenants[tenant]
+        return EvictReceipt(tenant=tenant, chunks=st.tree.num_chunks,
+                            rows=st.tree.n_total,
+                            ledger_total=st.ledger.total)
+
+    # -- streaming path ------------------------------------------------------
+
+    def insert(self, tenant: str, parts: Sequence[Any],
+               y: Optional[Any] = None) -> InsertReceipt:
+        st = self.state(tenant)
+        hits0 = self.plan_cache.hits
+        t0 = time.perf_counter()
+        stats = st.tree.insert(parts, y)
+        dt = time.perf_counter() - t0
+        st.inserts += 1
+        return InsertReceipt(
+            tenant=tenant, chunk_idx=st.tree.num_chunks - 1, stats=stats,
+            ledger_total=st.ledger.total,
+            plan_hit=self.plan_cache.hits > hits0, latency_s=dt,
+        )
+
+    def query(self, tenant: str, *, reduce_to: Optional[int] = None,
+              key: Optional[jax.Array] = None) -> QueryReceipt:
+        st = self.state(tenant)
+        t0 = time.perf_counter()
+        result = st.tree.query(reduce_to=reduce_to, key=key)
+        dt = time.perf_counter() - t0
+        st.queries += 1
+        return QueryReceipt(tenant=tenant, result=result, m=result.m,
+                            ledger_total=st.ledger.total, latency_s=dt)
+
+    # -- cross-tenant batched builds -----------------------------------------
+
+    def attach_dataset(self, name: str, ds: VFLDataset) -> None:
+        """Register shared reference data one-shot builds can target."""
+        if name in self._datasets:
+            raise ValueError(f"dataset {name!r} already attached")
+        self._datasets[name] = ds
+
+    def submit(
+        self,
+        tenant: str,
+        dataset: str,
+        m: int,
+        *,
+        key: jax.Array,
+        task: Union[str, CoresetTask] = "vrlr",
+        **params: Any,
+    ) -> int:
+        """Queue a one-shot build; returns a ticket redeemed by ``flush``.
+
+        The draw is a pure function of (dataset, task, params, m, key) —
+        batching with other tenants' requests cannot change it (the batched
+        engine vmaps over the key axis; pinned in the tests).
+        """
+        if dataset not in self._datasets:
+            raise KeyError(f"dataset {dataset!r} not attached; "
+                           f"have: {sorted(self._datasets)}")
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append(_BuildRequest(
+            ticket=ticket, tenant=tenant, dataset=dataset,
+            task=get_task(task).name, m=int(m), key=key,
+            params=tuple(sorted(params.items())),
+        ))
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def flush(self) -> Dict[int, Coreset]:
+        """Execute all pending requests; ONE batched-engine dispatch per
+        compatible ``(dataset, task, params)`` group.
+
+        Each group stacks its requests' keys as the seed axis and takes the
+        union of requested budgets as the grid; request r's result is cell
+        ``(r, ms.index(m_r))``.  Every cell still pays its own exact comm
+        schedule on the submitting tenant's ledger (if that tenant has one).
+        """
+        pending, self._pending = self._pending, []
+        groups: Dict[Tuple[str, str, Tuple], List[_BuildRequest]] = {}
+        for req in pending:
+            groups.setdefault((req.dataset, req.task, req.params),
+                              []).append(req)
+
+        out: Dict[int, Coreset] = {}
+        for (ds_name, task, params), reqs in groups.items():
+            ds = self._datasets[ds_name]
+            ms = tuple(sorted({r.m for r in reqs}))
+            keys = jax.numpy.stack([r.key for r in reqs])
+            grid = build_coresets_batched(
+                task, ds, ms, keys=keys, backend="ref", **dict(params))
+            self.batched_flushes += 1
+            self.batched_cells += len(reqs)
+            for i, req in enumerate(reqs):
+                ledger = (self._tenants[req.tenant].ledger
+                          if req.tenant in self._tenants else None)
+                out[req.ticket] = grid.coreset(i, ms.index(req.m),
+                                               ledger=ledger)
+        return out
+
+    # -- introspection -------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "tenants": len(self._tenants),
+            "plan_cache_size": len(self.plan_cache),
+            "plan_hits": self.plan_cache.hits,
+            "plan_misses": self.plan_cache.misses,
+            "batched_flushes": self.batched_flushes,
+            "batched_cells": self.batched_cells,
+            "pending": len(self._pending),
+        }
+
+    def describe(self) -> str:
+        s = self.stats()
+        lines = [
+            f"CoresetService: {s['tenants']} tenant(s), plan cache "
+            f"{s['plan_cache_size']} plan(s) ({s['plan_hits']} hit(s) / "
+            f"{s['plan_misses']} miss(es)), "
+            f"{s['batched_cells']} batched cell(s) in "
+            f"{s['batched_flushes']} flush(es)",
+        ]
+        for name in self.tenants():
+            st = self._tenants[name]
+            t = st.tree
+            lines.append(
+                f"  {name}: task={t.task.name} budget={t.budget} "
+                f"chunks={t.num_chunks} rows={t.n_total} height={t.height} "
+                f"comm={st.ledger.total}"
+            )
+        return "\n".join(lines)

@@ -1,0 +1,369 @@
+"""Merge-and-reduce coreset tree: online maintenance under arriving rows.
+
+Every engine in :mod:`repro.core` is a batch job over a fixed
+:class:`~repro.core.vfl.VFLDataset`; the paper's setting — parties
+continuously accumulating feature slices of a shared user population —
+means rows arrive over time.  This module maintains a coreset of the
+ever-growing stream with the classic merge-and-reduce scheme, built
+entirely out of the existing machinery:
+
+  * **Leaves** — each arriving superchunk (one (rows, d_j)-per-party batch)
+    is summarized by a PIPELINED-engine build
+    (:class:`~repro.core.api.CoresetPipeline` with a forced
+    ``engine="pipelined"`` spec): draw-identical to calling
+    ``build_coreset_streaming`` on the chunk directly with
+    :meth:`CoresetTree.leaf_key`.
+  * **Merges** — a binary counter over levels: level l summarizes 2^l
+    chunks, and two occupied level-l nodes combine into one level-(l+1)
+    node by RE-RUNNING DIS over the union of the two materialized coresets
+    with the children's weights folded into the sensitivities
+    (:func:`merge_reduce`): the sampling mass of union row i is
+    ``w_i * g_i^(j)``, and the drawn row keeps
+    ``w_i * G~/(m * w_i g_i) = G~/(m g_i)`` — the weighted
+    Feldman-Langberg draw, so reduction never re-touches raw stream rows.
+  * **Cost** — inserting a superchunk builds ONE leaf plus at most
+    ``ceil(log2(chunks))`` merge nodes, each over a 2m-row union: O(m log n)
+    work, never a full-data rescore (:class:`InsertStats` is the census the
+    tests assert against).
+  * **Accounting** — every leaf pays Algorithm 1's DIS bill; every merge
+    pays :meth:`CommSchedule.merge` (Theorem 2.5's ``+2mT`` composition for
+    BOTH consumed children) plus the union re-sample's DIS bill, all
+    recorded on one ledger per tree.  The composed total depends only on
+    the number of chunks and the budget — insert ORDER never changes it
+    (pinned by a hypothesis property in ``tests/test_serve_tree.py``).
+
+Key chain (all draws deterministic given the root ``key``):
+leaf i consumes ``fold_in(fold_in(key, 1), i)``; merge op t consumes
+``fold_in(fold_in(key, 2), t)``; a query after i inserts defaults to
+``fold_in(fold_in(key, 3), i)`` — so repeated queries between inserts are
+draw-identical, and the whole tree replays exactly from (key, insert
+sequence).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import time
+from typing import Any, List, Mapping, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.core.api import CoresetPipeline, CoresetTask, get_task, resolve_backend
+from repro.core.comm import CommLedger, CommSchedule
+from repro.core.coreset import MaterializedCoreset
+from repro.core.dis import dis_plan_full, uniform_plan
+from repro.core.plan import CoresetSpec, PlanCache
+from repro.core.vfl import VFLDataset
+
+
+def merge_reduce(
+    task: Union[str, CoresetTask],
+    mats: Sequence[MaterializedCoreset],
+    m: int,
+    *,
+    key: jax.Array,
+    backend: str = "auto",
+    params: Optional[Mapping[str, Any]] = None,
+    ledger: Optional[CommLedger] = None,
+    bill_consume: bool = True,
+) -> MaterializedCoreset:
+    """One merge-and-reduce step: re-run DIS over the weighted union of
+    ``mats``, weights folded into the sensitivities.
+
+    Sampling mass of union row i at party j is ``w_i * g_i^(j)`` (the
+    task's score on the union rows times the row's carried weight), so the
+    induced marginal is ``w_i g_i / sum w g`` and the drawn row's new
+    weight ``w_i * G~/(m * w_i g_i)`` telescopes to ``G~/(m g_i)`` — an
+    unbiased estimator over the weighted point set, which is exactly what
+    merge-and-reduce needs at every level.  The uniform baseline
+    degenerates to m uniform union draws with weights scaled by
+    ``m_union/m``.
+
+    Billing: ``bill_consume`` records :meth:`CommSchedule.merge` — Theorem
+    2.5's composition term for consuming every child coreset (each party
+    receives the union's indices and returns its per-row shares) — then the
+    union re-sample's own DIS (or uniform) schedule.  The returned node's
+    ``comm_units`` composes: children's totals + this op's bill.
+    """
+    task = get_task(task)
+    params = dict(params or {})
+    mats = list(mats)
+    union = MaterializedCoreset.concat(mats)
+    ds_u = union.dataset()
+    T = ds_u.T
+    m = int(m)
+    if m < 1:
+        raise ValueError(f"reduce budget must be >= 1, got {m}")
+
+    if task.score_fn is None:
+        S, w0 = uniform_plan(key, ds_u.n, m)
+        S = np.asarray(S)
+        weights = np.asarray(w0) * union.weights[S]
+        schedule = CommSchedule.uniform(T, m)
+    else:
+        if task.needs_labels and ds_u.y is None:
+            raise ValueError(f"{task.name} requires labels at party T")
+        # The tree's params may carry stream-scorer-only knobs (rcond,
+        # center_sample, ...); the union re-score runs the full score_fn,
+        # so keep only what its signature accepts.
+        sig = inspect.signature(task.score_fn).parameters
+        if not any(p.kind is inspect.Parameter.VAR_KEYWORD
+                   for p in sig.values()):
+            params = {k: v for k, v in params.items() if k in sig}
+        scores, dis_key = task.score_fn(key, ds_u,
+                                        backend=resolve_backend(backend),
+                                        **params)
+        folded = scores * np.asarray(union.weights,
+                                     np.float32)[None, :]      # (T, m_union)
+        plan = dis_plan_full(dis_key, folded, m)
+        if not bool(plan.totals.sum() > 0):
+            raise ValueError("DIS requires a positive total score")
+        S = np.asarray(plan.indices)
+        weights = np.asarray(plan.weights) * union.weights[S]
+        schedule = CommSchedule.dis(T, m, counts=np.asarray(plan.counts))
+
+    if bill_consume:
+        sizes = [mt.m for mt in mats]
+        # merge(T, a, b) bills per consumed row, so folding k children into
+        # (sum of first k-1, last) charges exactly sum_i 2*m_i*T
+        schedule = CommSchedule.merge(T, sum(sizes[:-1]), sizes[-1]) + schedule
+    schedule.record(ledger)
+    return MaterializedCoreset(
+        indices=union.indices[S],
+        weights=weights.astype(union.weights.dtype),
+        parts=[p[S] for p in union.parts],
+        y=None if union.y is None else union.y[S],
+        comm_units=union.comm_units + schedule.total,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class InsertStats:
+    """The census of ONE insert — what the no-full-rescore tests assert.
+
+    ``rescored_rows`` counts every row any score function touched during
+    the insert: the chunk itself (the leaf build) plus each merge's 2m-row
+    union — NEVER the n_total rows already absorbed.  ``merges`` is bounded
+    by the binary-counter carry chain: at most ``log2(chunks)+1``.
+    """
+
+    chunk_rows: int
+    leaf_builds: int
+    merges: int
+    rescored_rows: int
+    comm_delta: int
+    height_after: int
+    latency_s: float
+
+
+@dataclasses.dataclass
+class TreeNode:
+    """One merge-and-reduce node: a materialized coreset summarizing
+    ``chunks`` superchunks (``rows`` raw rows) at binary-counter ``level``."""
+
+    level: int
+    chunks: int
+    rows: int
+    cs: MaterializedCoreset
+
+
+class CoresetTree:
+    """Merge-and-reduce maintenance of one task's coreset over a row stream.
+
+    ``insert(parts, y)`` absorbs one superchunk (per-party feature slices of
+    the same new rows, labels at party T when the task needs them) in
+    O(m log n); ``query()`` returns the current summary — the weighted
+    union of the O(log n) occupied levels, or, with ``reduce_to=m``, one
+    more :func:`merge_reduce` down to exactly m rows.  All indices are
+    GLOBAL row ids (offset by the stream position at insert time), so query
+    results evaluate directly against the full stream.
+
+    ``headroom`` (default 2) is the classic merge-and-reduce variance
+    control: every NODE stores ``headroom * budget`` rows
+    (``node_budget``), and only the final query reduce comes down to the
+    requested m — each level's re-sample then draws from a richer union,
+    and the measured rel_error of a height-h tree lands within ~2x of the
+    flat equal-budget build instead of compounding per level
+    (``benchmarks/serve.py``'s gate).  ``headroom=1`` gives the textbook
+    equal-size scheme.  Insert cost stays O(m log n); the ledger bills the
+    node_budget-sized schedules exactly.
+
+    The tree owns a :class:`CommLedger` (or records on a supplied one) —
+    after any sequence of inserts its total is exactly the composed
+    merge-and-reduce bill, invariant to insert order.
+    """
+
+    def __init__(
+        self,
+        task: Union[str, CoresetTask],
+        budget: int,
+        *,
+        key: jax.Array,
+        backend: str = "auto",
+        block_size: int = 65536,
+        chunk_blocks: Optional[int] = None,
+        prefetch: Optional[bool] = None,
+        params: Optional[Mapping[str, Any]] = None,
+        plan_cache: Optional[PlanCache] = None,
+        ledger: Optional[CommLedger] = None,
+        headroom: int = 2,
+    ) -> None:
+        self.task = get_task(task)
+        self.budget = int(budget)
+        if self.budget < 1:
+            raise ValueError(f"budget must be >= 1, got {budget}")
+        self.headroom = int(headroom)
+        if self.headroom < 1:
+            raise ValueError(f"headroom must be >= 1, got {headroom}")
+        self.node_budget = self.headroom * self.budget
+        self.key = key
+        self.backend = backend
+        self.block_size = int(block_size)
+        self.chunk_blocks = chunk_blocks
+        self.prefetch = prefetch
+        self.params = dict(params or {})
+        self.plan_cache = plan_cache
+        self.ledger = ledger if ledger is not None else CommLedger()
+        self.levels: List[Optional[TreeNode]] = []
+        self.num_chunks = 0
+        self.n_total = 0
+        self._merge_ops = 0
+        self.last_insert: Optional[InsertStats] = None
+
+    # -- the deterministic key chain ----------------------------------------
+
+    def leaf_key(self, i: int) -> jax.Array:
+        """The PRNG key leaf ``i`` consumes — the SAME key a direct
+        ``build_coreset_streaming`` of that chunk (at ``node_budget``)
+        would need to reproduce the leaf draw bit for bit."""
+        return jax.random.fold_in(jax.random.fold_in(self.key, 1), i)
+
+    def merge_key(self, t: int) -> jax.Array:
+        return jax.random.fold_in(jax.random.fold_in(self.key, 2), t)
+
+    def query_key(self) -> jax.Array:
+        """Stable between inserts (keyed by the insert count), so repeated
+        queries of an unchanged tree are draw-identical."""
+        return jax.random.fold_in(jax.random.fold_in(self.key, 3),
+                                  self.num_chunks)
+
+    # -- geometry ------------------------------------------------------------
+
+    @property
+    def height(self) -> int:
+        occ = [i for i, nd in enumerate(self.levels) if nd is not None]
+        return (max(occ) + 1) if occ else 0
+
+    @property
+    def num_nodes(self) -> int:
+        return sum(1 for nd in self.levels if nd is not None)
+
+    @property
+    def m_active(self) -> int:
+        """Rows held across all occupied levels (the un-reduced query size)."""
+        return sum(nd.cs.m for nd in self.levels if nd is not None)
+
+    # -- the operations ------------------------------------------------------
+
+    def insert(self, parts: Sequence[Any], y: Optional[Any] = None) -> InsertStats:
+        """Absorb one superchunk: ONE pipelined leaf build over the chunk +
+        the binary-counter carry chain of merges.  Returns the census."""
+        t0 = time.perf_counter()
+        led0 = self.ledger.total
+        parts = [np.asarray(p) for p in parts]
+        chunk_rows = int(parts[0].shape[0])
+        if chunk_rows < 1:
+            raise ValueError("superchunk must contain at least one row")
+        ds = VFLDataset(parts, None if y is None else np.asarray(y))
+
+        spec = CoresetSpec(
+            task=self.task, budgets=self.node_budget, engine="pipelined",
+            backend=self.backend, block_size=self.block_size,
+            chunk_blocks=self.chunk_blocks, prefetch=self.prefetch,
+            params=self.params,
+        )
+        pipe = CoresetPipeline(ds, plan_cache=self.plan_cache)
+        cs = pipe.build(spec, key=self.leaf_key(self.num_chunks),
+                        ledger=self.ledger)
+        node = TreeNode(
+            level=0, chunks=1, rows=chunk_rows,
+            cs=MaterializedCoreset.from_coreset(cs, ds, offset=self.n_total),
+        )
+        self.num_chunks += 1
+        self.n_total += chunk_rows
+
+        merges = 0
+        rescored = chunk_rows
+        lvl = 0
+        while lvl < len(self.levels) and self.levels[lvl] is not None:
+            other = self.levels[lvl]
+            self.levels[lvl] = None
+            rescored += other.cs.m + node.cs.m     # the 2m-row merge union
+            node = self._merge(other, node)
+            merges += 1
+            lvl += 1
+        if lvl == len(self.levels):
+            self.levels.append(None)
+        self.levels[lvl] = node
+
+        self.last_insert = InsertStats(
+            chunk_rows=chunk_rows, leaf_builds=1, merges=merges,
+            rescored_rows=rescored, comm_delta=self.ledger.total - led0,
+            height_after=self.height,
+            latency_s=time.perf_counter() - t0,
+        )
+        return self.last_insert
+
+    def _merge(self, left: TreeNode, right: TreeNode) -> TreeNode:
+        """Combine two equal-level nodes (older child LEFT, so the union's
+        row order is stream order) into one level-(l+1) node."""
+        mat = merge_reduce(
+            self.task, [left.cs, right.cs], self.node_budget,
+            key=self.merge_key(self._merge_ops), backend=self.backend,
+            params=self.params, ledger=self.ledger,
+        )
+        self._merge_ops += 1
+        return TreeNode(level=left.level + 1, chunks=left.chunks + right.chunks,
+                        rows=left.rows + right.rows, cs=mat)
+
+    def query(
+        self,
+        *,
+        reduce_to: Optional[int] = None,
+        key: Optional[jax.Array] = None,
+    ) -> MaterializedCoreset:
+        """The current stream summary.
+
+        Default: the weighted UNION of the occupied levels (size
+        ``m_active`` <= budget * height; union is server-side bookkeeping —
+        no protocol cost, ``comm_units`` composes the children's).  With
+        ``reduce_to=m``: one more :func:`merge_reduce` down to exactly m
+        rows, billed on the tree's ledger like any merge.  Deterministic:
+        the default key is stable until the next insert.
+        """
+        nodes = [nd for nd in reversed(self.levels) if nd is not None]
+        if not nodes:
+            raise ValueError("query on an empty tree — insert a chunk first")
+        if reduce_to is None:
+            return MaterializedCoreset.concat([nd.cs for nd in nodes])
+        return merge_reduce(
+            self.task, [nd.cs for nd in nodes], int(reduce_to),
+            key=self.query_key() if key is None else key,
+            backend=self.backend, params=self.params, ledger=self.ledger,
+        )
+
+    def describe(self) -> str:
+        occ = [(nd.level, nd.chunks, nd.cs.m)
+               for nd in self.levels if nd is not None]
+        lines = [
+            f"CoresetTree: task={self.task.name} budget={self.budget} "
+            f"(nodes keep {self.node_budget}) "
+            f"chunks={self.num_chunks} rows={self.n_total}",
+            f"  height={self.height} nodes={self.num_nodes} "
+            f"m_active={self.m_active} comm={self.ledger.total}",
+        ]
+        for level, chunks, m in sorted(occ, reverse=True):
+            lines.append(f"  level {level}: {chunks} chunk(s), m={m}")
+        return "\n".join(lines)

@@ -1,8 +1,9 @@
-"""CommLedger unit tests + Algorithm 1 accounting bounds."""
+"""CommLedger unit tests + Algorithm 1 accounting bounds + Theorem 2.5
+composition schedules (materialize pinned, the named merge form)."""
 
 import pytest
 
-from repro.core.comm import CommLedger, theoretical_dis_cost
+from repro.core.comm import CommLedger, CommSchedule, theoretical_dis_cost
 
 
 def test_ledger_totals():
@@ -35,3 +36,40 @@ def test_theoretical_bounds_monotone():
     lo2, hi2 = theoretical_dis_cost(200, 3)
     assert lo1 <= hi1 and lo2 <= hi2
     assert lo2 > lo1 and hi2 > hi1
+
+
+def test_materialize_total_pinned():
+    """Theorem 2.5's +2mT consume bill — pinned so the composed ledgers of
+    every earlier PR keep their exact totals."""
+    for T, m in ((1, 1), (2, 64), (5, 1000)):
+        sched = CommSchedule.materialize(T, m)
+        assert sched.total == 2 * m * T
+        led = CommLedger()
+        sched.record(led)
+        assert led.by_tag()["materialize/S_down"] == m * T
+        assert led.by_tag()["materialize/rows_up"] == m * T
+
+
+def test_merge_schedule_is_both_children_consume_bill():
+    """The named merge-and-reduce form: consuming BOTH children costs
+    2*(m_left + m_right)*T — and only depends on the union size, so
+    folding k coresets as (sum of first k-1, last) bills sum_i 2*m_i*T."""
+    for T, ml, mr in ((1, 1, 1), (2, 64, 64), (3, 10, 500)):
+        sched = CommSchedule.merge(T, ml, mr)
+        assert sched.total == 2 * (ml + mr) * T
+        # the merge of two equal coresets costs exactly two materializes
+        assert CommSchedule.merge(T, ml, ml).total \
+            == 2 * CommSchedule.materialize(T, ml).total
+    assert CommSchedule.merge(2, 0, 7).total == CommSchedule.materialize(2, 7).total
+    led = CommLedger()
+    CommSchedule.merge(2, 3, 4).record(led)
+    assert led.by_prefix("merge/") == led.total == 28
+    assert led.by_tag()["merge/S_down"] == 14
+    assert led.by_tag()["merge/rows_up"] == 14
+
+
+def test_merge_schedule_rejects_negative():
+    with pytest.raises(ValueError):
+        CommSchedule.merge(2, -1, 4)
+    with pytest.raises(ValueError):
+        CommSchedule.merge(2, 4, -1)

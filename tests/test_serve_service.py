@@ -1,0 +1,169 @@
+"""Multi-tenant CoresetService: tenant isolation + draw determinism, shared
+plan cache across tenants, cross-tenant batched flush (one dispatch per
+group, per-request draws unchanged), receipts and eviction."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import PlanCache, VFLDataset
+from repro.core.api import build_coreset
+from repro.serve import CoresetService, CoresetTree
+
+BLOCK = 256
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_programs():
+    # Drop this module's compiled programs on exit (see test_serve_tree).
+    yield
+    jax.clear_caches()
+
+
+def _chunk(rng, rows=300, dims=(3, 2), labels=True):
+    parts = [rng.normal(size=(rows, d)).astype(np.float32) for d in dims]
+    y = rng.normal(size=(rows,)).astype(np.float32) if labels else None
+    return parts, y
+
+
+def test_register_insert_query_evict_lifecycle():
+    svc = CoresetService()
+    svc.register("a", task="vrlr", budget=24, seed=1, block_size=BLOCK)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        parts, y = _chunk(rng)
+        r = svc.insert("a", parts, y)
+        assert r.tenant == "a" and r.chunk_idx == i
+        assert r.stats.leaf_builds == 1 and r.latency_s > 0
+        assert r.ledger_total == svc.state("a").ledger.total
+    q = svc.query("a", reduce_to=24)
+    assert q.m == 24 and (q.result.weights > 0).all()
+    ev = svc.evict("a")
+    assert ev.chunks == 3 and ev.rows == 900 and ev.ledger_total > 0
+    with pytest.raises(KeyError):
+        svc.query("a")
+    with pytest.raises(ValueError):
+        svc.register("b", budget=8)
+        svc.register("b", budget=8)
+
+
+def test_tenant_draws_isolated_and_deterministic():
+    """A tenant's coresets depend only on its own (seed, insert sequence) —
+    other tenants' traffic cannot perturb them."""
+    chunks = [_chunk(np.random.default_rng(s)) for s in range(4)]
+
+    def run(with_noise):
+        svc = CoresetService()
+        svc.register("t", task="vrlr", budget=20, seed=7, block_size=BLOCK)
+        if with_noise:
+            svc.register("noisy", task="vkmc", budget=16, seed=3,
+                         block_size=BLOCK, k=3)
+        for i, (parts, y) in enumerate(chunks):
+            svc.insert("t", parts, y)
+            if with_noise:
+                np_parts, _ = _chunk(np.random.default_rng(100 + i),
+                                     labels=False)
+                svc.insert("noisy", np_parts)
+                svc.query("noisy")
+        return svc.query("t", reduce_to=20).result
+
+    a, b = run(False), run(True)
+    np.testing.assert_array_equal(a.indices, b.indices)
+    np.testing.assert_allclose(a.weights, b.weights)
+
+
+def test_service_tree_matches_standalone_tree():
+    chunks = [_chunk(np.random.default_rng(s)) for s in range(3)]
+    svc = CoresetService()
+    svc.register("t", task="vrlr", budget=16, seed=5, block_size=BLOCK)
+    tree = CoresetTree("vrlr", 16, key=jax.random.PRNGKey(5),
+                       block_size=BLOCK)
+    for parts, y in chunks:
+        svc.insert("t", parts, y)
+        tree.insert(parts, y)
+    a = svc.query("t", reduce_to=16).result
+    b = tree.query(reduce_to=16)
+    np.testing.assert_array_equal(a.indices, b.indices)
+    assert svc.state("t").ledger.total == tree.ledger.total
+
+
+def test_plan_cache_shared_across_tenants():
+    svc = CoresetService()
+    for name, seed in (("a", 1), ("b", 2), ("c", 3)):
+        svc.register(name, task="vrlr", budget=16, seed=seed,
+                     block_size=BLOCK)
+    rng = np.random.default_rng(0)
+    receipts = []
+    for name in ("a", "b", "c"):
+        parts, y = _chunk(rng)        # same shapes for every tenant
+        receipts.append(svc.insert(name, parts, y))
+    # first insert compiles the plan, the rest hit the shared cache
+    assert not receipts[0].plan_hit
+    assert receipts[1].plan_hit and receipts[2].plan_hit
+    s = svc.stats()
+    assert s["plan_cache_size"] == 1 and s["plan_misses"] == 1
+    assert s["plan_hits"] >= 2
+
+
+def test_batched_flush_one_dispatch_per_group_draws_pinned():
+    """R compatible requests flush as ONE batched build, and each request's
+    draw equals the standalone build_coreset for its (key, m)."""
+    rng = np.random.default_rng(4)
+    parts, y = _chunk(rng, rows=800)
+    ds = VFLDataset(parts, y)
+    svc = CoresetService()
+    svc.register("a", budget=8, seed=1, block_size=BLOCK)
+    svc.register("b", budget=8, seed=2, block_size=BLOCK)
+    svc.attach_dataset("ref", ds)
+    with pytest.raises(ValueError):
+        svc.attach_dataset("ref", ds)
+    with pytest.raises(KeyError):
+        svc.submit("a", "nope", 16, key=jax.random.PRNGKey(0))
+
+    keys = [jax.random.PRNGKey(10 + i) for i in range(3)]
+    t0 = svc.submit("a", "ref", 32, key=keys[0], task="vrlr")
+    t1 = svc.submit("b", "ref", 48, key=keys[1], task="vrlr")
+    t2 = svc.submit("a", "ref", 32, key=keys[2], task="vkmc", k=3)
+    assert svc.pending == 3
+    led_a0 = svc.state("a").ledger.total
+    out = svc.flush()
+    assert svc.pending == 0
+    assert set(out) == {t0, t1, t2}
+    # two groups: (ref, vrlr, {}) with 2 requests, (ref, vkmc, k=3) with 1
+    assert svc.batched_flushes == 2 and svc.batched_cells == 3
+    # draws pinned to the standalone builder (batched m==m_cap cells are
+    # exactly the sequential result; smaller m is the iid prefix)
+    solo = build_coreset("vrlr", ds, 48, key=keys[1], backend="ref")
+    np.testing.assert_array_equal(np.asarray(out[t1].indices),
+                                  np.asarray(solo.indices))
+    np.testing.assert_allclose(np.asarray(out[t1].weights),
+                               np.asarray(solo.weights), rtol=1e-6)
+    assert out[t0].indices.shape == (32,) and out[t2].indices.shape == (32,)
+    # each cell billed its exact schedule on the submitting tenant's ledger
+    assert svc.state("a").ledger.total \
+        == led_a0 + out[t0].comm_units + out[t2].comm_units
+
+
+def test_flush_requires_resubmission_and_empty_flush_ok():
+    svc = CoresetService()
+    assert svc.flush() == {}
+    rng = np.random.default_rng(9)
+    parts, y = _chunk(rng, rows=400)
+    svc.attach_dataset("d", VFLDataset(parts, y))
+    t = svc.submit("ghost", "d", 16, key=jax.random.PRNGKey(0))
+    out = svc.flush()                 # unknown tenants still get results,
+    assert out[t].indices.shape == (16,)   # just no ledger to bill
+    assert svc.flush() == {}
+
+
+def test_shared_plan_cache_injection():
+    cache = PlanCache()
+    svc1 = CoresetService(plan_cache=cache)
+    svc2 = CoresetService(plan_cache=cache)
+    rng = np.random.default_rng(2)
+    svc1.register("t", budget=16, seed=1, block_size=BLOCK)
+    svc2.register("t", budget=16, seed=1, block_size=BLOCK)
+    parts, y = _chunk(rng)
+    assert not svc1.insert("t", parts, y).plan_hit
+    assert svc2.insert("t", parts, y).plan_hit   # warmed by svc1
+    assert len(cache) == 1

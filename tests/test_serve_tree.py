@@ -1,0 +1,329 @@
+"""Merge-and-reduce coreset tree: leaf draw-identity, insert census (no
+full-data rescore), ledger composition + insert-order invariance, global
+index integrity, query determinism, and graceful rel_error degradation of a
+height-h tree vs the flat equal-budget build.
+"""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import CommLedger, PlanCache, VFLDataset
+from repro.core.api import build_coreset, build_coreset_streaming
+from repro.core.comm import CommSchedule
+from repro.core.solve import evaluate, fit_kmeans, fit_ridge, full_data_coreset
+from repro.serve import CoresetTree, merge_reduce
+
+BLOCK = 256
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_programs():
+    # The tree tests compile many small per-shape programs; drop them when
+    # the module finishes so the accumulated executables don't destabilize
+    # XLA:CPU compiles in later test modules of the same process.
+    yield
+    jax.clear_caches()
+
+
+def _chunks(seed, num, rows, dims=(3, 2), labels=True):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(num):
+        parts = [rng.normal(size=(rows, d)).astype(np.float32) for d in dims]
+        theta = np.linspace(1.0, -1.0, dims[0]).astype(np.float32)
+        y = (parts[0] @ theta
+             + 0.1 * rng.normal(size=rows).astype(np.float32)) if labels else None
+        out.append((parts, y))
+    return out
+
+
+def _stream_ds(chunks):
+    """The dense view of the whole stream (what the tree never re-reads)."""
+    T = len(chunks[0][0])
+    parts = [np.concatenate([c[0][j] for c in chunks]) for j in range(T)]
+    y = None if chunks[0][1] is None else np.concatenate([c[1] for c in chunks])
+    return VFLDataset(parts, y)
+
+
+# -- leaves ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("task,params", [("vrlr", {}), ("vkmc", {"k": 3})])
+def test_leaf_draw_identical_to_direct_pipelined_build(task, params):
+    labels = task == "vrlr"
+    chunks = _chunks(0, 2, 400, labels=labels)
+    tree = CoresetTree(task, 48, key=jax.random.PRNGKey(5),
+                       block_size=BLOCK, params=params)
+    for parts, y in chunks:
+        tree.insert(parts, y)
+    # replay each leaf directly through the streaming shim with leaf_key(i)
+    # (leaves build at node_budget = headroom * budget)
+    for i, (parts, y) in enumerate(chunks):
+        ds = VFLDataset(parts, y)
+        led = CommLedger()
+        direct = build_coreset_streaming(task, ds, tree.node_budget,
+                                         key=tree.leaf_key(i),
+                                         block_size=BLOCK, ledger=led,
+                                         **params)
+        # leaf 1 was merged away, but leaf 0's materialization survives in
+        # the level-1 union's FIRST half only after re-sampling; instead
+        # rebuild the tree one chunk at a time and check the fresh leaf.
+        t2 = CoresetTree(task, 48, key=jax.random.PRNGKey(5),
+                         block_size=BLOCK, params=params)
+        for parts2, y2 in chunks[: i + 1]:
+            t2.insert(parts2, y2)
+        if i % 2 == 0:          # even leaf index -> still at level 0
+            leaf = t2.levels[0].cs
+            offset = i * 400
+            np.testing.assert_array_equal(
+                np.asarray(direct.indices) + offset, leaf.indices)
+            np.testing.assert_allclose(np.asarray(direct.weights),
+                                       leaf.weights, rtol=1e-6)
+            # leaf bill == the direct build's bill
+            assert direct.comm_units == led.total
+
+
+def test_leaf_rows_match_stream_rows():
+    chunks = _chunks(1, 3, 300)
+    stream = _stream_ds(chunks)
+    tree = CoresetTree("vrlr", 32, key=jax.random.PRNGKey(0), block_size=BLOCK)
+    for parts, y in chunks:
+        tree.insert(parts, y)
+    q = tree.query()
+    for j in range(stream.T):
+        np.testing.assert_array_equal(
+            np.asarray(stream.parts[j])[q.indices], q.parts[j])
+    np.testing.assert_array_equal(np.asarray(stream.y)[q.indices], q.y)
+    assert (q.weights > 0).all()
+
+
+# -- insert census: never a full-data rescore --------------------------------
+
+
+def test_insert_census_o_log_n():
+    m = 32
+    tree = CoresetTree("vrlr", m, key=jax.random.PRNGKey(2), block_size=BLOCK)
+    nb = tree.node_budget            # headroom * m rows per node
+    assert nb == 2 * m
+    total_rows = 0
+    for i, (parts, y) in enumerate(_chunks(3, 9, 250)):
+        stats = tree.insert(parts, y)
+        total_rows += 250
+        # binary-counter carry bound: #merges = #trailing ones of i
+        carries = bin(i)[2:][::-1]
+        expect = len(carries) - len(carries.lstrip("1"))
+        assert stats.merges == expect
+        assert stats.merges <= math.floor(math.log2(i + 1)) + 1
+        assert stats.leaf_builds == 1
+        # census: the chunk itself + one 2-node union per merge — NEVER n_total
+        assert stats.rescored_rows == 250 + 2 * nb * stats.merges
+        if i > 0:
+            assert stats.rescored_rows < total_rows
+        assert stats.height_after == tree.height
+    assert tree.n_total == total_rows
+    assert tree.num_chunks == 9
+    # 9 = 0b1001 -> two occupied levels
+    assert tree.num_nodes == 2 and tree.m_active == 2 * nb
+
+
+def test_insert_comm_delta_is_exact():
+    """Each insert's ledger delta = leaf DIS + per-merge (merge + DIS),
+    all at node_budget = headroom * m."""
+    m, T = 40, 2
+    nb = 2 * m                       # default headroom
+    leaf_bill = CommSchedule.dis_total(T, nb)
+    merge_bill = CommSchedule.merge(T, nb, nb).total + leaf_bill
+    tree = CoresetTree("vrlr", m, key=jax.random.PRNGKey(3), block_size=BLOCK)
+    assert tree.node_budget == nb
+    for parts, y in _chunks(4, 4, 200):
+        stats = tree.insert(parts, y)
+        assert stats.comm_delta == leaf_bill + stats.merges * merge_bill
+    assert tree.ledger.total == 4 * leaf_bill + 3 * merge_bill
+    # the root node's composed comm_units equals the whole ledger
+    assert tree.query().comm_units == tree.ledger.total
+
+
+# -- merge_reduce semantics --------------------------------------------------
+
+
+def test_merge_reduce_folds_weights_and_composes_comm():
+    chunks = _chunks(5, 2, 300)
+    mats, led = [], CommLedger()
+    for i, (parts, y) in enumerate(chunks):
+        ds = VFLDataset(parts, y)
+        cs = build_coreset("vrlr", ds, 30, key=jax.random.PRNGKey(i),
+                           backend="ref")
+        from repro.core.coreset import MaterializedCoreset
+        mats.append(MaterializedCoreset.from_coreset(cs, ds, offset=300 * i))
+    merged = merge_reduce("vrlr", mats, 30, key=jax.random.PRNGKey(9),
+                          ledger=led, backend="ref")
+    assert merged.m == 30 and merged.T == mats[0].T
+    assert (merged.weights > 0).all()
+    # global ids come from the union, rows gathered consistently
+    stream = _stream_ds(chunks)
+    for j in range(stream.T):
+        np.testing.assert_array_equal(
+            np.asarray(stream.parts[j])[merged.indices], merged.parts[j])
+    # billing: Thm 2.5 consume for both children + the union re-sample DIS
+    T = mats[0].T
+    assert led.by_prefix("merge/") == 2 * (30 + 30) * T
+    assert led.total == 2 * 60 * T + CommSchedule.dis_total(T, 30)
+    assert merged.comm_units == mats[0].comm_units + mats[1].comm_units + led.total
+
+
+def test_merge_reduce_uniform_task():
+    chunks = _chunks(6, 2, 200, labels=False)
+    from repro.core.coreset import MaterializedCoreset
+    mats = []
+    for i, (parts, _) in enumerate(chunks):
+        ds = VFLDataset(parts)
+        cs = build_coreset("uniform", ds, 25, key=jax.random.PRNGKey(i),
+                           backend="ref")
+        mats.append(MaterializedCoreset.from_coreset(cs, ds, offset=200 * i))
+    merged = merge_reduce("uniform", mats, 25, key=jax.random.PRNGKey(1))
+    assert merged.m == 25 and (merged.weights > 0).all()
+
+
+def test_tree_rejects_bad_inputs():
+    tree = CoresetTree("vrlr", 16, key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        tree.query()
+    with pytest.raises(ValueError):
+        CoresetTree("vrlr", 0, key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        CoresetTree("vrlr", 16, key=jax.random.PRNGKey(0), headroom=0)
+    with pytest.raises(ValueError):
+        tree.insert([np.zeros((0, 2), np.float32)])
+
+
+# -- determinism -------------------------------------------------------------
+
+
+def test_query_deterministic_until_next_insert():
+    tree = CoresetTree("vrlr", 24, key=jax.random.PRNGKey(8), block_size=BLOCK)
+    chunks = _chunks(7, 3, 220)
+    for parts, y in chunks[:2]:
+        tree.insert(parts, y)
+    q1 = tree.query(reduce_to=24)
+    q2 = tree.query(reduce_to=24)
+    np.testing.assert_array_equal(q1.indices, q2.indices)
+    np.testing.assert_allclose(q1.weights, q2.weights)
+    tree.insert(*chunks[2])
+    q3 = tree.query(reduce_to=24)
+    assert not np.array_equal(q1.indices, q3.indices[: q1.m]) or \
+        tree.num_chunks == 2  # key advanced with the insert count
+
+
+def test_tree_replays_exactly():
+    chunks = _chunks(9, 5, 180)
+    def run():
+        t = CoresetTree("vrlr", 20, key=jax.random.PRNGKey(4),
+                        block_size=BLOCK, plan_cache=PlanCache())
+        for parts, y in chunks:
+            t.insert(parts, y)
+        return t.query(reduce_to=20)
+    a, b = run(), run()
+    np.testing.assert_array_equal(a.indices, b.indices)
+    np.testing.assert_allclose(a.weights, b.weights)
+    assert a.comm_units == b.comm_units
+
+
+# -- ledger: insert order never changes the composed total -------------------
+
+
+def test_ledger_insert_order_invariance():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.lists(st.sampled_from([120, 180, 240]), min_size=1, max_size=5),
+           st.randoms(use_true_random=False))
+    @settings(max_examples=8, deadline=None)
+    def prop(sizes, rnd):
+        perm = list(sizes)
+        rnd.shuffle(perm)
+        rng = np.random.default_rng(0)
+        def run(order):
+            t = CoresetTree("vrlr", 16, key=jax.random.PRNGKey(1),
+                            block_size=BLOCK)
+            for r in order:
+                parts = [rng.normal(size=(r, d)).astype(np.float32)
+                         for d in (3, 2)]
+                y = rng.normal(size=(r,)).astype(np.float32)
+                t.insert(parts, y)
+            return t.ledger.total
+        # the composed bill depends only on (chunk count, budget, T) — the
+        # leaf DIS bill is chunk-size-free and the carry chain is
+        # count-determined — so any permutation of sizes bills identically
+        assert run(sizes) == run(perm)
+
+    prop()
+
+
+def test_ledger_insert_order_invariance_fixed():
+    """hypothesis-free version of the invariant (the container may lack
+    hypothesis): three fixed permutations of mixed chunk sizes compose to
+    the same ledger total."""
+    rng = np.random.default_rng(0)
+    def run(order):
+        t = CoresetTree("vrlr", 16, key=jax.random.PRNGKey(1),
+                        block_size=BLOCK)
+        for r in order:
+            parts = [rng.normal(size=(r, d)).astype(np.float32)
+                     for d in (3, 2)]
+            y = rng.normal(size=(r,)).astype(np.float32)
+            t.insert(parts, y)
+        return t.ledger.total
+    sizes = [120, 240, 180, 120, 240]
+    totals = {run(sizes), run(sizes[::-1]),
+              run([240, 120, 120, 240, 180])}
+    assert len(totals) == 1
+
+
+# -- end-to-end: tree vs flat build ------------------------------------------
+
+
+@pytest.mark.parametrize("task", ["vrlr", "vkmc"])
+def test_tree_rel_error_degrades_gracefully(task):
+    """A height-h tree's reduced query stays usable: its full-data rel_error
+    is within a constant factor of the flat equal-budget batch build (the
+    2x gate at n=1e5 lives in benchmarks/serve.py; this is the small-n
+    smoke version with a looser factor for draw noise)."""
+    labels = task == "vrlr"
+    chunks = _chunks(11, 8, 1500, dims=(4, 3), labels=labels)
+    stream = _stream_ds(chunks)
+    m = 256
+    params = {} if labels else {"k": 4}
+    tree = CoresetTree(task, m, key=jax.random.PRNGKey(6),
+                       block_size=1024, params=params)
+    for parts, y in chunks:
+        tree.insert(parts, y)
+    q = tree.query(reduce_to=m)
+    flat = build_coreset(task, stream, m, key=jax.random.PRNGKey(60),
+                         backend="ref", **params)
+    kev = jax.random.PRNGKey(7)
+    if task == "vrlr":
+        base = fit_ridge(stream, full_data_coreset(stream), 0.1).params
+        r_tree = evaluate(stream, fit_ridge(stream, q.coreset(), 0.1),
+                          baseline=base).rel_error
+        r_flat = evaluate(stream, fit_ridge(stream, flat, 0.1),
+                          baseline=base).rel_error
+    else:
+        base = fit_kmeans(stream, full_data_coreset(stream), 4, key=kev,
+                          restarts=3, backend="ref").params
+        r_tree = evaluate(stream, fit_kmeans(stream, q.coreset(), 4,
+                                             key=jax.random.fold_in(kev, 1),
+                                             restarts=3, backend="ref"),
+                          baseline=base).rel_error
+        r_flat = evaluate(stream, fit_kmeans(stream, flat, 4,
+                                             key=jax.random.fold_in(kev, 2),
+                                             restarts=3, backend="ref"),
+                          baseline=base).rel_error
+    # both small, and the tree within a constant factor of flat (fixed keys
+    # make this deterministic; with default headroom=2 the measured tree
+    # error sits well inside both gates — see benchmarks/serve.py for the
+    # seed-averaged 2x gate)
+    assert r_tree < 0.25
+    assert r_tree <= max(8.0 * max(r_flat, 0.0), 0.05)

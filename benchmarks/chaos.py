@@ -1,0 +1,285 @@
+"""Chaos benchmark: the fault seam under injected party failures.
+
+Three experiments, recorded under the ``chaos`` section of
+BENCH_kernels.json:
+
+* ``sweep`` — drop-rate p in {0, 0.05, 0.2} x fault_policy in
+  {retry, degrade}: every build must COMPLETE, and the composed bill must
+  stay exact — base tags bill exactly the fault-free schedule (asserted to
+  the unit), retransmissions live under ``retry/`` tags, and at the
+  heaviest cell (p=0.2, retry) the total ledger stays within the
+  ``(1 + p * max_retries)x`` envelope of the fault-free bill.  p=0 is the
+  null-plan identity: the bill equals the transportless build's exactly.
+* ``degrade`` — one party certainly dead at round 1 under
+  ``fault_policy="degrade"``: the build continues over the survivors and
+  the downstream ridge fit's rel_error stays within 3x of the all-party
+  build at n=2e4 (plus a small absolute floor for the both-tiny regime).
+* ``resume`` — a pipelined build killed mid-scan (probe bomb) and a tree
+  insert killed the same way: after the crash the tree has rolled back
+  (ledger + counters), and the checkpointed retry finishes DRAW-IDENTICAL
+  (indices, weights, ledger total) to a never-interrupted run.
+
+  PYTHONPATH=src python -m benchmarks.chaos --fast
+  PYTHONPATH=src python -m benchmarks.run --sections chaos --strict
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import write_bench_json, write_rows
+from benchmarks.serve import _chunk_stream, _stream_ds
+from repro.core import (
+    CommLedger,
+    CoresetPipeline,
+    CoresetSpec,
+    FaultPlan,
+    StreamCheckpoint,
+    Transport,
+)
+from repro.core.solve import evaluate, fit_ridge, full_data_coreset
+from repro.serve import CoresetTree
+
+BENCH = "chaos"
+SECTION = "chaos"
+
+DROP_RATES = (0.0, 0.05, 0.2)
+POLICIES = ("retry", "degrade")
+MAX_RETRIES = 6              # 0.2^7 ~ 1e-5 exhaustion odds per message
+OVERHEAD_GATE_P = 0.2        # the envelope is asserted at the heaviest cell
+DEGRADE_GATE = 3.0           # degraded rel_error within 3x of all-party
+REL_FLOOR = 0.02             # both-tiny regime: absolute floor on the gate
+DEGRADE_N = 20_000           # the acceptance criterion's n
+
+
+def _vrlr_stream(seed, n, d=12, T=3, num_chunks=4):
+    chunks = _chunk_stream(seed, num_chunks, n // num_chunks, d, T, True)
+    return chunks, _stream_ds(chunks)
+
+
+# --------------------------------------------------------------------------
+# Experiment 1: drop-rate x policy sweep with exact-billing gates
+# --------------------------------------------------------------------------
+
+def run_sweep(fast: bool):
+    n = 8192 if fast else 32768
+    m, d, T = 256, 12, 3
+    _, ds = _vrlr_stream(21, n, d, T)
+    key = jax.random.PRNGKey(17)
+
+    # the fault-free reference bill (transportless build, same spec/key)
+    led0 = CommLedger()
+    spec0 = CoresetSpec(task="vrlr", budgets=m, engine="materialized",
+                        backend="ref")
+    cs0 = CoresetPipeline(ds).build(spec0, key=key, ledger=led0)
+    base_bill = led0.total
+
+    entries, rows = [], []
+    for policy in POLICIES:
+        for p in DROP_RATES:
+            plan = FaultPlan(seed=1000 + int(p * 100), drop=p,
+                             max_retries=MAX_RETRIES)
+            tr = Transport(plan)
+            led = CommLedger()
+            spec = CoresetSpec(task="vrlr", budgets=m, engine="materialized",
+                               backend="ref", fault_policy=policy)
+            t0 = time.time()
+            cs = CoresetPipeline(ds).build(spec, key=key, ledger=led,
+                                           transport=tr)
+            wall = time.time() - t0
+
+            retry_units = led.by_prefix("retry/")
+            # exact billing: base tags are ALWAYS the fault-free schedule
+            if cs.degraded is None:
+                if led.total - retry_units != base_bill:
+                    raise AssertionError(
+                        f"{policy}@p={p}: base-tag bill "
+                        f"{led.total - retry_units} != fault-free {base_bill}")
+                if not np.array_equal(np.asarray(cs.indices),
+                                      np.asarray(cs0.indices)):
+                    raise AssertionError(
+                        f"{policy}@p={p}: draws drifted from the "
+                        f"fault-free build despite no party dropping")
+            if p == 0.0 and (retry_units != 0 or led.total != base_bill):
+                raise AssertionError(
+                    f"{policy}@p=0: null plan billed {led.total} "
+                    f"(retries {retry_units}), fault-free is {base_bill}")
+            if policy == "retry" and p == OVERHEAD_GATE_P:
+                envelope = (1.0 + p * MAX_RETRIES) * base_bill
+                if not led.total <= envelope:
+                    raise AssertionError(
+                        f"retry@p={p}: bill {led.total} exceeds the "
+                        f"(1 + p*max_retries) envelope {envelope:.0f} "
+                        f"of fault-free {base_bill}")
+            entries.append({
+                "kind": "sweep", "policy": policy, "drop": p, "n": n, "m": m,
+                "bill": led.total, "base_bill": base_bill,
+                "retry_units": retry_units, "retries": tr.stats.retries,
+                "drops": tr.stats.drops, "timeouts": tr.stats.timeouts,
+                "corrupts": tr.stats.corrupts,
+                "degraded": cs.degraded is not None,
+                "sim_time_s": round(tr.stats.sim_time_s, 4),
+            })
+            rows.append({
+                "bench": BENCH, "method": f"{policy}-p{p}", "size": n,
+                "cost_mean": round(led.total / max(base_bill, 1), 4),
+                "cost_std": 0.0, "comm": led.total,
+                "wall_s": round(wall, 3),
+            })
+    return entries, rows
+
+
+# --------------------------------------------------------------------------
+# Experiment 2: degraded build quality vs the all-party build
+# --------------------------------------------------------------------------
+
+def run_degrade(fast: bool):
+    n, m, d, T = DEGRADE_N, 512, 30, 3
+    seeds = 2 if fast else 4
+    _, ds = _vrlr_stream(3, n, d, T)
+    lam = 0.1 * n
+    baseline = fit_ridge(ds, full_data_coreset(ds), lam).params
+
+    def rel(cs):
+        rep = evaluate(ds, fit_ridge(ds, cs, lam), baseline=baseline)
+        return max(rep.rel_error, 0.0)
+
+    r_full, r_degr, wall = [], [], 0.0
+    for s in range(seeds):
+        key = jax.random.PRNGKey(100 + s)
+        spec_full = CoresetSpec(task="vrlr", budgets=m, engine="materialized",
+                                backend="ref")
+        r_full.append(rel(CoresetPipeline(ds).build(spec_full, key=key)))
+        # party 0 certainly dead at round 1; labels (party T-1) survive
+        tr = Transport(FaultPlan(seed=7 + s, drop={0: 1.0}, max_retries=2))
+        spec_d = CoresetSpec(task="vrlr", budgets=m, engine="materialized",
+                             backend="ref", fault_policy="degrade")
+        t0 = time.time()
+        cs_d = CoresetPipeline(ds).build(spec_d, key=key, transport=tr)
+        wall += time.time() - t0
+        if cs_d.degraded is None or cs_d.degraded.surviving != (1, 2):
+            raise AssertionError(
+                f"expected party 0 dropped, got receipt {cs_d.degraded}")
+        r_degr.append(rel(cs_d))
+    mean_full, mean_degr = float(np.mean(r_full)), float(np.mean(r_degr))
+    gate = max(DEGRADE_GATE * mean_full, REL_FLOOR)
+    if not mean_degr <= gate:
+        raise AssertionError(
+            f"degraded rel_error {mean_degr:.4f} exceeds "
+            f"max({DEGRADE_GATE}x all-party {mean_full:.4f}, {REL_FLOOR}) "
+            f"(n={n}, m={m}, {seeds} seeds)")
+    entry = {
+        "kind": "degrade", "n": n, "m": m, "seeds": seeds,
+        "rel_full": round(mean_full, 6), "rel_degraded": round(mean_degr, 6),
+        "ratio": round(mean_degr / max(mean_full, 1e-12), 3),
+        "bound_factor": T / (T - 1),
+    }
+    row = {"bench": BENCH, "method": "degrade-one-party", "size": n,
+           "cost_mean": round(mean_degr, 6),
+           "cost_std": round(float(np.std(r_degr)), 6),
+           "comm": 0, "wall_s": round(wall / seeds, 3)}
+    return [entry], [row]
+
+
+# --------------------------------------------------------------------------
+# Experiment 3: mid-insert crash + checkpointed resume, draw-identical
+# --------------------------------------------------------------------------
+
+class _Bomb:
+    """A probe that raises on its k-th superchunk step — the crash."""
+
+    def __init__(self, at: int) -> None:
+        self.at = at
+        self.calls = 0
+
+    def __call__(self) -> None:
+        self.calls += 1
+        if self.calls == self.at:
+            raise RuntimeError("chaos: killed mid-scan")
+
+
+def run_resume(fast: bool):
+    n = 4096 if fast else 16384
+    m, d, T = 128, 12, 3
+    chunks, _ = _vrlr_stream(5, n, d, T, num_chunks=4)
+    tree_kw = dict(key=jax.random.PRNGKey(0), backend="ref",
+                   block_size=256, chunk_blocks=2)
+
+    t_ref = CoresetTree("vrlr", m, **tree_kw)
+    ck = StreamCheckpoint()
+    t_cr = CoresetTree("vrlr", m, checkpoint=ck, **tree_kw)
+    t0 = time.time()
+    crashes = 0
+    for i, (parts, y) in enumerate(chunks):
+        t_ref.insert(parts, y)
+        if i == 2:                        # kill chunk 2's leaf build mid-scan
+            pre_total = t_cr.ledger.total
+            pre_chunks = t_cr.num_chunks
+            import repro.serve.tree as treemod
+            orig = treemod.CoresetPipeline.build
+            bomb = _Bomb(at=2)
+
+            def crashing(self, *a, **kw):
+                kw["probe"] = bomb
+                return orig(self, *a, **kw)
+
+            treemod.CoresetPipeline.build = crashing
+            try:
+                t_cr.insert(parts, y)
+                raise AssertionError("the bomb never went off")
+            except RuntimeError:
+                crashes += 1
+            finally:
+                treemod.CoresetPipeline.build = orig
+            if (t_cr.ledger.total, t_cr.num_chunks) != (pre_total, pre_chunks):
+                raise AssertionError(
+                    "crashed insert left state behind: ledger "
+                    f"{pre_total}->{t_cr.ledger.total}, chunks "
+                    f"{pre_chunks}->{t_cr.num_chunks}")
+        t_cr.insert(parts, y)             # the retry (resumes from ckpt)
+    wall = time.time() - t0
+
+    q_ref, q_cr = t_ref.query(), t_cr.query()
+    if not (np.array_equal(q_ref.indices, q_cr.indices)
+            and np.array_equal(q_ref.weights, q_cr.weights)
+            and t_ref.ledger.total == t_cr.ledger.total):
+        raise AssertionError(
+            "crash+resume diverged from the uninterrupted stream: "
+            f"m {q_ref.m} vs {q_cr.m}, bill {t_ref.ledger.total} vs "
+            f"{t_cr.ledger.total}")
+    if ck.resumes < 1:
+        raise AssertionError("the retried insert never loaded a checkpoint")
+    entry = {
+        "kind": "resume", "n": n, "m": m, "chunks": len(chunks),
+        "crashes": crashes, "ckpt_saves": ck.saves,
+        "ckpt_resumes": ck.resumes, "draw_identical": True,
+        "bill": t_cr.ledger.total,
+    }
+    row = {"bench": BENCH, "method": "crash-resume", "size": n,
+           "cost_mean": 0.0, "cost_std": 0.0,
+           "comm": t_cr.ledger.total, "wall_s": round(wall, 3)}
+    return [entry], [row]
+
+
+def run(fast: bool = True):
+    entries, rows = [], []
+    for fn in (run_sweep, run_degrade, run_resume):
+        e, r = fn(fast)
+        entries.extend(e)
+        rows.extend(r)
+    write_rows(BENCH, rows)
+    write_bench_json(SECTION, entries)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true", default=True)
+    ap.add_argument("--full", dest="fast", action="store_false")
+    args = ap.parse_args()
+    for r in run(fast=args.fast):
+        print(r)

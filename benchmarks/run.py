@@ -42,6 +42,7 @@ MODULES = [
     "serve",            # online service: tenant latency + tree-vs-flat quality
     "selector_step",    # beyond-paper: LLM coreset batch selection
     "assumption_sweep",  # beyond-paper: Assumption 4.1/5.1 violation sweep
+    "chaos",            # fault injection: retry billing + degrade + resume
 ]
 
 
@@ -53,6 +54,10 @@ def main() -> int:
                          f"(known: {','.join(MODULES)})")
     ap.add_argument("--list", action="store_true",
                     help="print the section names and exit")
+    ap.add_argument("--strict", action="store_true",
+                    help="re-raise the first section failure instead of "
+                         "continuing (non-zero exit with a traceback; used "
+                         "by the CI gate steps)")
     args = ap.parse_args()
     if args.list:
         print("\n".join(MODULES))
@@ -75,6 +80,8 @@ def main() -> int:
                 derived = f"cost={r['cost_mean']:.4g} comm={r['comm']}"
                 print(f"{label},{us:.0f},{derived}")
         except Exception as e:  # keep the suite going; report at the end
+            if args.strict:
+                raise
             # failures go to stderr ONLY — stdout stays parseable CSV
             failures += 1
             print(f"{name},0,ERROR:{type(e).__name__}:{e}", file=sys.stderr)

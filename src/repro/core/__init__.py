@@ -13,6 +13,9 @@ Public API:
   FitResult, EvalReport, full_data_coreset                (solve — downstream layer)
   VFLDataset, split_columns, standardize                  (vfl)
   CommLedger, CommSchedule, theoretical_dis_cost          (comm)
+  FaultPlan, Transport, PartyUnavailable, DegradedBuild,
+  DroppedParty, TransportStats, StreamCheckpoint,
+  deliver_or_record, FAULT_POLICIES                       (faults — party fault model)
   dis_plan, dis_plan_full, dis_plan_blocked, server_plan, uniform_plan,
   dis_sample, uniform_sample, dis_marginals,
   dis_blocked_marginals, blocked_geometry                 (dis — Algorithm 1)
@@ -69,6 +72,17 @@ from repro.core.solve import (
     solver_for,
 )
 from repro.core.comm import CommLedger, CommSchedule, theoretical_dis_cost
+from repro.core.faults import (
+    FAULT_POLICIES,
+    DegradedBuild,
+    DroppedParty,
+    FaultPlan,
+    PartyUnavailable,
+    StreamCheckpoint,
+    Transport,
+    TransportStats,
+    deliver_or_record,
+)
 from repro.core.coreset import (
     Coreset,
     MaterializedCoreset,

@@ -46,6 +46,12 @@ import numpy as np
 from repro.core.comm import CommLedger, CommSchedule
 from repro.core.coreset import Coreset
 from repro.core.dis import _float_dtype, dis_plan_full, uniform_plan
+from repro.core.faults import (
+    DegradedBuild,
+    PartyUnavailable,
+    StreamCheckpoint,
+    Transport,
+)
 from repro.core.plan import (
     DEFAULT_CHUNK_BLOCKS,
     ENGINES,
@@ -217,26 +223,103 @@ CORESET_TASKS.register("uniform")(
 # code path (draw identity by construction, pinned by tests/test_plan.py).
 # --------------------------------------------------------------------------
 
+def _policy_retries(fault_policy: str) -> Optional[int]:
+    """``fail`` is fail-fast (one attempt per message); ``retry``/``degrade``
+    use the transport plan's own ``max_retries``."""
+    return 0 if fault_policy == "fail" else None
+
+
+def _faulted_round1(
+    spec: CoresetTask, ds: VFLDataset, transport: Transport,
+    ledger: Optional[CommLedger], fault_policy: str,
+) -> Tuple[VFLDataset, Optional[list], Optional[DegradedBuild]]:
+    """Deliver DIS round 1 through the transport; under ``degrade`` a party
+    exhausting its retries here — BEFORE any score travels — is dropped and
+    the build continues over the survivors.
+
+    Returns ``(effective dataset, surviving original party ids or None,
+    DegradedBuild receipt or None, round-1 units billed)``.  The label
+    party (T-1) is irreplaceable for a labels-bearing task, and losing
+    every party is unrecoverable — both re-raise :exc:`PartyUnavailable`.
+    """
+    rep = transport.deliver(
+        CommSchedule.dis_round1(ds.T), ledger,
+        max_retries=_policy_retries(fault_policy),
+        drop_on_exhaust=(fault_policy == "degrade"),
+    )
+    if not rep.failed:
+        return ds, None, None, rep.units
+    alive = sorted(set(range(ds.T)) - set(rep.failed))
+    dropped = tuple(sorted(rep.failed.values(), key=lambda d: d.party))
+    if not alive:
+        d = dropped[0]
+        raise PartyUnavailable(d.party, d.tag, d.attempts)
+    if spec.needs_labels and (ds.T - 1) in rep.failed:
+        # labels live ONLY at party T-1; no surviving subset can score vrlr
+        d = rep.failed[ds.T - 1]
+        raise PartyUnavailable(d.party, d.tag, d.attempts)
+    degraded = DegradedBuild(dropped=dropped, surviving=tuple(alive),
+                             total_parties=ds.T)
+    return ds.select_parties(alive), alive, degraded, rep.units
+
+
 def _exec_materialized(
     spec: CoresetTask, ds: VFLDataset, m: int, key, backend: str,
     ledger: Optional[CommLedger], params: dict,
+    transport: Optional[Transport] = None, fault_policy: str = "fail",
 ) -> Coreset:
     """The eager sequential engine — the fidelity reference against the
-    seed's builders (scores computed eagerly, DIS on the full matrix)."""
+    seed's builders (scores computed eagerly, DIS on the full matrix).
+
+    With a ``transport`` the DIS rounds are DELIVERED instead of recorded:
+    round 1 before scoring (where ``degrade`` can still drop a party —
+    sensitivities are then recomputed over the surviving feature slices),
+    rounds 2-3 after the draw.  Without one (or with a null fault plan) the
+    ledger entries and draws are bit-identical to the pre-transport path.
+    """
     if spec.needs_labels and ds.y is None:
         raise ValueError(f"{spec.name} requires labels at party T")
+    retries = _policy_retries(fault_policy)
     if spec.score_fn is None:
         S, w = uniform_plan(key, ds.n, m)
         schedule = CommSchedule.uniform(ds.T, m)
-    else:
+        if transport is None:
+            schedule.record(ledger)
+            return Coreset(S, w, schedule.total)
+        rep = transport.deliver(schedule, ledger, max_retries=retries,
+                                drop_on_exhaust=(fault_policy == "degrade"))
+        degraded = None
+        if rep.failed:
+            dropped = tuple(sorted(rep.failed.values(), key=lambda d: d.party))
+            alive = sorted(set(range(ds.T)) - set(rep.failed))
+            degraded = DegradedBuild(dropped=dropped, surviving=tuple(alive),
+                                     total_parties=ds.T)
+        return Coreset(S, w, rep.units, degraded=degraded)
+
+    if transport is None:
         scores, dis_key = spec.score_fn(key, ds, backend=backend, **params)
         plan = dis_plan_full(dis_key, scores, m)
         if not bool(plan.totals.sum() > 0):
             raise ValueError("DIS requires a positive total score")
-        S, w = plan.indices, plan.weights
         schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
-    schedule.record(ledger)
-    return Coreset(S, w, schedule.total)
+        schedule.record(ledger)
+        return Coreset(plan.indices, plan.weights, schedule.total)
+
+    eff_ds, alive, degraded, units1 = _faulted_round1(
+        spec, ds, transport, ledger, fault_policy)
+    scores, dis_key = spec.score_fn(key, eff_ds, backend=backend, **params)
+    plan = dis_plan_full(dis_key, scores, m)
+    if not bool(plan.totals.sum() > 0):
+        raise ValueError("DIS requires a positive total score")
+    # rounds 2-3 exhaust hard even under degrade: by now the scores exist
+    # and dropping a party would orphan its drawn rows (documented)
+    rep23 = transport.deliver(
+        CommSchedule.dis_rounds23(ds.T, m, counts=np.asarray(plan.counts),
+                                  parties=alive),
+        ledger, max_retries=retries, drop_on_exhaust=False,
+    )
+    return Coreset(plan.indices, plan.weights, units1 + rep23.units,
+                   degraded=degraded)
 
 
 # (task spec, dims, labeled?, n, m, backend, params) -> jitted builder.
@@ -328,6 +411,8 @@ def _exec_streaming(
     spec: CoresetTask, ds: VFLDataset, m: int, key, backend: str,
     ledger: Optional[CommLedger], probe, block_size: int, chunk_blocks: int,
     prefetch: bool, pipelined: bool, sharded_masses: bool, params: dict,
+    transport: Optional[Transport] = None, fault_policy: str = "fail",
+    checkpoint: Optional[StreamCheckpoint] = None,
 ) -> Coreset:
     """The streamed / pipelined engines: block-scan scoring + hierarchical
     (party, block) DIS.  ``pipelined`` selects the superchunk-grouped
@@ -335,6 +420,15 @@ def _exec_streaming(
     same draws as the block-at-a-time reference, fewer dispatches.  All
     knobs arrive RESOLVED (validated by :class:`CoresetSpec`, clamped by
     the planner) — nothing is coerced here.
+
+    ``transport`` delivers the DIS rounds through the fault seam exactly as
+    in :func:`_exec_materialized` (round 1 before the scorer is built, so
+    ``degrade`` drops a party before any pass over the data).
+    ``checkpoint`` (a :class:`~repro.core.faults.StreamCheckpoint`) makes
+    the scorer's scan passes resumable per superchunk: a crashed build
+    rerun with the same arguments restores the last completed superchunk's
+    accumulators and finishes draw-identically.  ``None`` for either keeps
+    today's exact code path.
     """
     from repro.core.streaming import (
         dis_plan_streamed,
@@ -344,30 +438,66 @@ def _exec_streaming(
 
     if spec.needs_labels and ds.y is None:
         raise ValueError(f"{spec.name} requires labels at party T")
+    retries = _policy_retries(fault_policy)
     if spec.score_fn is None:
         S, w = uniform_plan(key, ds.n, m)
         schedule = CommSchedule.uniform(ds.T, m)
-        schedule.record(ledger)
-        return Coreset(S, w, schedule.total)
+        if transport is None:
+            schedule.record(ledger)
+            return Coreset(S, w, schedule.total)
+        rep = transport.deliver(schedule, ledger, max_retries=retries,
+                                drop_on_exhaust=(fault_policy == "degrade"))
+        degraded = None
+        if rep.failed:
+            dropped = tuple(sorted(rep.failed.values(), key=lambda d: d.party))
+            alive = sorted(set(range(ds.T)) - set(rep.failed))
+            degraded = DegradedBuild(dropped=dropped, surviving=tuple(alive),
+                                     total_parties=ds.T)
+        return Coreset(S, w, rep.units, degraded=degraded)
+
+    alive = degraded = None
+    units1 = 0
+    eff_ds = ds
+    if transport is not None:
+        eff_ds, alive, degraded, units1 = _faulted_round1(
+            spec, ds, transport, ledger, fault_policy)
 
     masses = None
     if sharded_masses:
         # task/backend compatibility was validated by compile_plan — every
         # path into this executor goes through the planner
-        masses = _sharded_mass_table(spec.name, key, ds, block_size,
+        masses = _sharded_mass_table(spec.name, key, eff_ds, block_size,
                                      backend, params)
-    scorer = make_stream_scorer(spec.name, key, ds, int(block_size), backend,
-                                probe=probe, chunk_blocks=chunk_blocks,
-                                prefetch=prefetch, masses=masses, **params)
+    if checkpoint is not None:
+        checkpoint.bind((
+            spec.name, eff_ds.n, eff_ds.dims, eff_ds.y is not None,
+            int(block_size), int(chunk_blocks), bool(prefetch), backend,
+            tuple(sorted(params.items())), int(m),
+            tuple(np.asarray(_key_data(key)).ravel().tolist()),
+        ))
+    scorer = make_stream_scorer(spec.name, key, eff_ds, int(block_size),
+                                backend, probe=probe,
+                                chunk_blocks=chunk_blocks, prefetch=prefetch,
+                                masses=masses, ckpt=checkpoint, **params)
     if not bool(scorer.masses.sum() > 0):
         raise ValueError("DIS requires a positive total score")
     if pipelined:
         plan = dis_plan_streamed_batched(scorer, m, probe=probe)
     else:
         plan = dis_plan_streamed(scorer, m, probe=probe)
-    schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
-    schedule.record(ledger)
-    return Coreset(plan.indices, plan.weights, schedule.total)
+    if checkpoint is not None:
+        checkpoint.clear()            # the build completed; state is stale
+    if transport is None:
+        schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
+        schedule.record(ledger)
+        return Coreset(plan.indices, plan.weights, schedule.total)
+    rep23 = transport.deliver(
+        CommSchedule.dis_rounds23(ds.T, m, counts=np.asarray(plan.counts),
+                                  parties=alive),
+        ledger, max_retries=retries, drop_on_exhaust=False,
+    )
+    return Coreset(plan.indices, plan.weights, units1 + rep23.units,
+                   degraded=degraded)
 
 
 # --------------------------------------------------------------------------
@@ -522,6 +652,8 @@ class CoresetPipeline:
         keys: Optional[jax.Array] = None,
         ledger: Optional[CommLedger] = None,
         probe: Optional[Callable[[], None]] = None,
+        transport: Optional[Transport] = None,
+        checkpoint: Optional[StreamCheckpoint] = None,
     ) -> Union[Coreset, BatchedCoresets]:
         """Build per the (compiled) spec.
 
@@ -532,6 +664,15 @@ class CoresetPipeline:
         per-superchunk instrumentation hook.  The batched engine derives
         its bills lazily per cell (``grid.coreset(..., ledger=...)``), so
         ``ledger`` applies to single-cell engines only.
+
+        ``transport`` (a :class:`~repro.core.faults.Transport`) delivers
+        the protocol rounds through the party fault seam, honouring
+        ``spec.fault_policy``; with no transport — or a null fault plan —
+        every engine's draws AND ledger entries are bit-identical to a
+        transportless build (pinned in ``tests/test_faults.py``).
+        ``checkpoint`` (a :class:`~repro.core.faults.StreamCheckpoint`)
+        makes the streamed/pipelined engines' passes resumable per
+        superchunk.
         """
         if isinstance(spec, ExecutionPlan):
             ep = spec
@@ -548,6 +689,12 @@ class CoresetPipeline:
         task = get_task(cspec.task)
 
         if ep.engine == "batched":
+            if transport is not None or checkpoint is not None:
+                raise ValueError(
+                    "the batched engine bills its cells lazily; transport "
+                    "delivery and checkpointed resume apply to single-cell "
+                    "engines only"
+                )
             if keys is None:
                 if key is None:
                     raise ValueError("pass either `key` (+ num_seeds) or `keys`")
@@ -559,13 +706,32 @@ class CoresetPipeline:
             raise ValueError(f"the {ep.engine} engine requires `key`")
         m = cspec.budget
         if ep.engine == "materialized":
-            fn = _exec_fused if cspec.jit else _exec_materialized
-            return fn(task, self.ds, m, key, ep.backend, ledger, cspec.params)
+            if checkpoint is not None:
+                raise ValueError(
+                    "checkpointed resume is a streamed/pipelined-engine "
+                    "feature; the materialized engine has no superchunk "
+                    "passes to checkpoint"
+                )
+            if cspec.jit:
+                if transport is not None:
+                    raise ValueError(
+                        "the fused jit path cannot deliver per-round "
+                        "schedules through a transport; use the eager "
+                        "materialized engine (jit=False)"
+                    )
+                return _exec_fused(task, self.ds, m, key, ep.backend, ledger,
+                                   cspec.params)
+            return _exec_materialized(task, self.ds, m, key, ep.backend,
+                                      ledger, cspec.params,
+                                      transport=transport,
+                                      fault_policy=cspec.fault_policy)
         return _exec_streaming(
             task, self.ds, m, key, ep.backend, ledger, probe,
             cspec.block_size, ep.chunk_blocks, ep.prefetch,
             pipelined=(ep.engine == "pipelined"),
             sharded_masses=cspec.sharded_masses, params=cspec.params,
+            transport=transport, fault_policy=cspec.fault_policy,
+            checkpoint=checkpoint,
         )
 
 

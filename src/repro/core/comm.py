@@ -67,6 +67,26 @@ class CommLedger:
         """Fresh ledger (used to isolate a sub-protocol's cost)."""
         return CommLedger()
 
+    # -- crash-safe snapshots ------------------------------------------------
+    def mark(self) -> int:
+        """A rollback point: the current message count.  Pair with
+        :meth:`rollback` to undo a failed multi-schedule operation (e.g. a
+        tree insert that died mid-merge) so the composed bill never counts
+        work that was rolled back."""
+        return len(self.messages)
+
+    def rollback(self, mark: int) -> None:
+        """Truncate to the state :meth:`mark` captured (``_by_tag`` is
+        rebuilt from the surviving messages)."""
+        if not 0 <= mark <= len(self.messages):
+            raise ValueError(
+                f"bad mark {mark}: ledger has {len(self.messages)} messages"
+            )
+        del self.messages[mark:]
+        self._by_tag = defaultdict(int)
+        for m in self.messages:
+            self._by_tag[m.tag] += m.units
+
     def merge(self, other: "CommLedger") -> None:
         for m in other.messages:
             self.send(m.tag, m.src, m.dst, m.units)
@@ -123,16 +143,49 @@ class CommSchedule:
     def dis(T: int, m: int, counts: Sequence[int]) -> "CommSchedule":
         """Algorithm 1's three rounds.  ``counts`` is the realised a_j vector
         (sum = m): round 2's m index uploads are attributed to the party that
-        actually sent them, not lumped onto party 0."""
-        counts = [int(c) for c in counts]
-        if len(counts) != T or sum(counts) != m:
-            raise ValueError(f"bad round-2 counts {counts} for T={T}, m={m}")
+        actually sent them, not lumped onto party 0.
+
+        Composed from :meth:`dis_round1` + :meth:`dis_rounds23` with
+        identical op order — the split exists so a fault-aware executor can
+        deliver round 1 BEFORE scoring (the point where a party can still
+        drop under ``fault_policy="degrade"``) and rounds 2-3 after the
+        draw, while fault-free delivery of the two halves back to back is
+        bit-identical to this one-shot schedule."""
+        return (CommSchedule.dis_round1(T)
+                + CommSchedule.dis_rounds23(T, m, counts))
+
+    @staticmethod
+    def dis_round1(T: int, parties: Optional[Sequence[int]] = None) -> "CommSchedule":
+        """DIS round 1 only: each party's total-score scalar up, its a_j
+        scalar down.  ``parties`` restricts (and re-labels) the ops to a
+        surviving subset — ids stay the ORIGINAL party numbers so degraded
+        builds bill against the parties that actually spoke."""
+        ids = list(range(T)) if parties is None else [int(j) for j in parties]
         ops: List[CommOp] = []
-        ops += [CommOp("dis/round1/G_j", j, 1) for j in range(T)]
-        ops += [CommOp("dis/round1/a_j", j, 1, down=True) for j in range(T)]
-        ops += [CommOp("dis/round2/S_up", j, counts[j]) for j in range(T)]
-        ops += [CommOp("dis/round2/S_bcast", j, m, down=True) for j in range(T)]
-        ops += [CommOp("dis/round3/g_scores", j, m) for j in range(T)]
+        ops += [CommOp("dis/round1/G_j", j, 1) for j in ids]
+        ops += [CommOp("dis/round1/a_j", j, 1, down=True) for j in ids]
+        return CommSchedule(tuple(ops))
+
+    @staticmethod
+    def dis_rounds23(
+        T: int, m: int, counts: Sequence[int],
+        parties: Optional[Sequence[int]] = None,
+    ) -> "CommSchedule":
+        """DIS rounds 2-3: per-party index uploads (the realised a_j),
+        the m-index broadcast, and the m score uploads.  ``parties`` maps
+        position i of ``counts`` to original party id ``parties[i]`` for
+        degraded builds over a surviving subset."""
+        counts = [int(c) for c in counts]
+        ids = (list(range(T)) if parties is None
+               else [int(j) for j in parties])
+        if len(counts) != len(ids) or sum(counts) != m:
+            raise ValueError(
+                f"bad round-2 counts {counts} for parties={ids}, m={m}"
+            )
+        ops: List[CommOp] = []
+        ops += [CommOp("dis/round2/S_up", j, c) for j, c in zip(ids, counts)]
+        ops += [CommOp("dis/round2/S_bcast", j, m, down=True) for j in ids]
+        ops += [CommOp("dis/round3/g_scores", j, m) for j in ids]
         return CommSchedule(tuple(ops))
 
     @staticmethod

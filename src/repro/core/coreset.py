@@ -9,7 +9,7 @@ entry points survive as deprecation shims in :mod:`repro.core`.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import TYPE_CHECKING, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +18,9 @@ import numpy as np
 from repro.core.comm import CommLedger, CommSchedule
 from repro.core.vfl import VFLDataset
 
+if TYPE_CHECKING:
+    from repro.core.faults import DegradedBuild
+
 
 @dataclasses.dataclass
 class Coreset:
@@ -25,11 +28,17 @@ class Coreset:
 
     Per Problem 1, the coreset is indices/weights — never raw rows — so the
     construction itself moves no feature data across parties.
+
+    ``degraded`` (default None: a full-federation build) is the
+    :class:`~repro.core.faults.DegradedBuild` receipt when the construction
+    continued without every party under ``fault_policy="degrade"`` — it
+    names the dropped parties/rounds and the widened sensitivity bound.
     """
 
     indices: jax.Array   # (m,) int
     weights: jax.Array   # (m,) float
     comm_units: int      # construction cost in paper units
+    degraded: Optional["DegradedBuild"] = None
 
     @property
     def m(self) -> int:
@@ -99,10 +108,18 @@ class MaterializedCoreset:
         shifts the (ds-local) indices into the global row space — the leaf
         case of the merge-and-reduce tree, where ``ds`` is one arriving
         superchunk starting at global row ``offset``."""
-        idx = np.asarray(cs.indices)
+        offset = int(offset)
+        if offset < 0:
+            raise ValueError(f"offset must be >= 0, got {offset}")
+        idx = np.asarray(cs.indices).astype(np.int64)
+        if idx.size and offset > np.iinfo(np.int64).max - int(idx.max()):
+            raise OverflowError(
+                f"global id overflow: offset {offset} + max local index "
+                f"{int(idx.max())} exceeds int64"
+            )
         y = None if ds.y is None else np.asarray(ds.y)[idx]
         return MaterializedCoreset(
-            indices=idx + int(offset),
+            indices=idx + offset,
             weights=np.asarray(cs.weights),
             parts=[np.asarray(p)[idx] for p in ds.parts],
             y=y,
@@ -119,6 +136,14 @@ class MaterializedCoreset:
         T = mats[0].T
         if any(m.T != T for m in mats):
             raise ValueError("party counts differ across coresets")
+        widths = tuple(p.shape[1] for p in mats[0].parts)
+        for i, mt in enumerate(mats[1:], start=1):
+            w = tuple(p.shape[1] for p in mt.parts)
+            if w != widths:
+                raise ValueError(
+                    f"party widths differ across coresets: coreset 0 has "
+                    f"{widths}, coreset {i} has {w}"
+                )
         has_y = mats[0].y is not None
         if any((m.y is not None) != has_y for m in mats):
             raise ValueError("label presence differs across coresets")

@@ -1,0 +1,488 @@
+"""Party fault model + the transport seam: fault-tolerant VFL rounds.
+
+Every protocol in this repo assumed the paper's idealized network: all T
+parties answer every round instantly and correctly.  Real VFL deployments
+see dropped messages, stragglers, and parties that disappear mid-round
+(the first-order applicability gap the VFL survey calls out; Compressed-VFL
+shows the statistical machinery tolerates imperfect messages).  This module
+is the seam every layer injects faults through:
+
+  * :class:`FaultPlan` — a deterministic, seeded chaos specification.  Each
+    logical message's fate is a pure function of ``(fault_seed, round_tag,
+    party, attempt)`` via the threefry PRNG (``jax.random.fold_in`` on a
+    stable CRC of the tag), so a chaos run is exactly replayable: the same
+    plan yields the same drops, the same retry counts, the same ledger — on
+    every run, on every machine.  Per-party rate overrides model asymmetric
+    links (one flaky party, the rest healthy).
+  * :class:`Transport` — delivers a :class:`~repro.core.comm.CommSchedule`
+    op by op.  A failed attempt (drop, detected corruption, or a simulated
+    delay exceeding the per-attempt timeout) is RETRANSMITTED up to
+    ``max_retries`` times with capped exponential backoff; every
+    retransmission-causing attempt is billed on the ledger under a
+    ``retry/<tag>`` entry with the message's full unit cost, so the
+    composed bill stays exact under faults (base tags bill exactly the
+    fault-free schedule; ``ledger.by_prefix("retry/")`` is exactly the
+    retransmission overhead).  With a null plan the delivery is
+    bit-identical to ``schedule.record(ledger)`` — same entries, same
+    order — which the fault-free pinning tests assert.
+  * :exc:`PartyUnavailable` / :class:`DegradedBuild` — what happens when a
+    party exhausts its retries.  Under ``fault_policy="fail"`` or
+    ``"retry"`` the build raises; under ``"degrade"`` the scoring round
+    drops the party, the build continues over the surviving feature slices
+    (sensitivities recomputed over the present parties), and the returned
+    coreset carries a :class:`DegradedBuild` receipt naming the dropped
+    parties/rounds and the widened sensitivity bound.
+  * :class:`StreamCheckpoint` — per-superchunk checkpoint of a streaming /
+    pipelined build's accumulator state (Gram / cluster stats / mass-table
+    columns + the completed-chunk counter), so a crashed build resumes at
+    the last completed superchunk and finishes DRAW-IDENTICALLY to an
+    uninterrupted run (the accumulators are restored bitwise; the threefry
+    key chain is untouched by the scan, so the DIS draw cannot drift).
+
+Simulated time: the transport never sleeps by default — delays, timeouts
+and backoff accumulate in ``TransportStats.sim_time_s`` so chaos tests run
+at full speed while latency accounting stays exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import zlib
+from typing import Any, Dict, Mapping, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.comm import CommLedger, CommSchedule
+
+FAULT_POLICIES = ("fail", "retry", "degrade")
+
+_Rate = Union[float, Mapping[int, float], Tuple[Tuple[int, float], ...]]
+
+
+class PartyUnavailable(RuntimeError):
+    """A party exhausted its delivery attempts for one protocol message."""
+
+    def __init__(self, party: int, tag: str, attempts: int) -> None:
+        super().__init__(
+            f"party {party} unavailable: {attempts} attempt(s) at "
+            f"{tag!r} all failed"
+        )
+        self.party = int(party)
+        self.tag = tag
+        self.attempts = int(attempts)
+
+
+@dataclasses.dataclass(frozen=True)
+class DroppedParty:
+    """One party lost during a build: which round's message exhausted its
+    retries, and after how many attempts."""
+
+    party: int
+    tag: str
+    attempts: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradedBuild:
+    """Receipt of a build that continued without every party.
+
+    ``bound_factor`` is the widened sensitivity bound: the paper's total
+    sensitivity sums per-party contributions, so a coreset built from
+    ``len(surviving)`` of ``total_parties`` slices guarantees the epsilon
+    bound only for the SURVIVING projection — the factor
+    ``total_parties / len(surviving)`` is the honest multiplier on the
+    guarantee a consumer should assume for the full feature space."""
+
+    dropped: Tuple[DroppedParty, ...]
+    surviving: Tuple[int, ...]
+    total_parties: int
+
+    @property
+    def bound_factor(self) -> float:
+        return self.total_parties / max(len(self.surviving), 1)
+
+    def describe(self) -> str:
+        drops = ", ".join(
+            f"party {d.party} at {d.tag} ({d.attempts} attempts)"
+            for d in self.dropped
+        )
+        return (
+            f"DegradedBuild: {len(self.surviving)}/{self.total_parties} "
+            f"parties survived (dropped: {drops}); sensitivity bound "
+            f"widened x{self.bound_factor:.2f}"
+        )
+
+
+@functools.lru_cache(maxsize=4096)
+def _tag_code(tag: str) -> int:
+    """Stable 31-bit code of a round tag (CRC32 — Python's ``hash`` is
+    salted per process and would break cross-run replay)."""
+    return zlib.crc32(tag.encode()) & 0x7FFFFFFF
+
+
+@functools.lru_cache(maxsize=256)
+def _seed_key(seed: int):
+    import jax
+
+    return jax.random.PRNGKey(seed)
+
+
+@functools.lru_cache(maxsize=65536)
+def _fault_draw(seed: int, tag: str, party: int, attempt: int) -> Tuple[float, float, float]:
+    """The threefry uniforms deciding one attempt's fate — a pure function
+    of ``(seed, tag, party, attempt)``, cached so repeated replays (and the
+    determinism property tests) never re-dispatch."""
+    import jax
+
+    sub = jax.random.fold_in(
+        jax.random.fold_in(jax.random.fold_in(_seed_key(seed), _tag_code(tag)),
+                           party),
+        attempt)
+    u = np.asarray(jax.random.uniform(sub, (3,)), np.float64)
+    return float(u[0]), float(u[1]), float(u[2])
+
+
+def _normalize_rate(rate: _Rate, what: str) -> Tuple[float, Tuple[Tuple[int, float], ...]]:
+    """(default rate, sorted per-party overrides) with [0, 1] validation."""
+    if isinstance(rate, Mapping):
+        overrides = tuple(sorted((int(j), float(p)) for j, p in rate.items()))
+        default = 0.0
+    elif isinstance(rate, tuple):
+        overrides = tuple(sorted((int(j), float(p)) for j, p in rate))
+        default = 0.0
+    else:
+        overrides = ()
+        default = float(rate)
+    for p in (default,) + tuple(p for _, p in overrides):
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(f"{what} probability must be in [0, 1], got {p}")
+    return default, overrides
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic, seeded per-party fault specification.
+
+    ``drop`` / ``corrupt`` / ``delay`` are probabilities — a scalar applies
+    to every party; a ``{party: p}`` mapping overrides per party (parties
+    not named get 0).  A delayed message whose simulated delay (uniform in
+    ``(0, delay_s]``) exceeds ``timeout_s`` counts as a failed attempt
+    exactly like a drop; a shorter delay just accrues simulated latency.
+    Corrupt messages are assumed checksum-detected at the receiver, so they
+    cost a retransmission like a drop (billed under the same ``retry/``
+    tag, counted separately in :class:`TransportStats`).
+
+    ``max_retries`` bounds retransmissions per message; backoff between
+    attempts is capped exponential: ``min(backoff_cap_s, backoff_base_s *
+    2**k)`` after the k-th failure (simulated — accrued, never slept).
+    """
+
+    seed: int = 0
+    drop: _Rate = 0.0
+    corrupt: _Rate = 0.0
+    delay: _Rate = 0.0
+    delay_s: float = 0.05
+    timeout_s: float = 0.02
+    max_retries: int = 3
+    backoff_base_s: float = 0.01
+    backoff_cap_s: float = 0.16
+
+    def __post_init__(self) -> None:
+        d, do = _normalize_rate(self.drop, "drop")
+        c, co = _normalize_rate(self.corrupt, "corrupt")
+        l, lo = _normalize_rate(self.delay, "delay")
+        object.__setattr__(self, "drop", do if do else d)
+        object.__setattr__(self, "corrupt", co if co else c)
+        object.__setattr__(self, "delay", lo if lo else l)
+        if not isinstance(self.seed, int) or isinstance(self.seed, bool):
+            raise ValueError(f"seed must be an int, got {self.seed!r}")
+        if not isinstance(self.max_retries, int) or self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be an int >= 0, got {self.max_retries!r}"
+            )
+        for name in ("delay_s", "timeout_s", "backoff_base_s", "backoff_cap_s"):
+            v = getattr(self, name)
+            if not v >= 0:
+                raise ValueError(f"{name} must be >= 0, got {v!r}")
+
+    @staticmethod
+    def none() -> "FaultPlan":
+        """The null plan: every message delivered first try — transport
+        delivery through it is bit-identical to ``schedule.record``."""
+        return FaultPlan()
+
+    def rate(self, kind: str, party: int) -> float:
+        r = getattr(self, kind)
+        if isinstance(r, tuple):
+            for j, p in r:
+                if j == party:
+                    return p
+            return 0.0
+        return float(r)
+
+    @property
+    def is_null(self) -> bool:
+        def _any(r) -> bool:
+            if isinstance(r, tuple):
+                return any(p > 0 for _, p in r)
+            return r > 0
+        return not (_any(self.drop) or _any(self.corrupt) or _any(self.delay))
+
+    def decide(self, tag: str, party: int, attempt: int) -> "FaultEvent":
+        """The fate of delivery attempt ``attempt`` of message ``tag`` to/from
+        ``party`` — deterministic (threefry on the plan's seed), replayable."""
+        p_drop = self.rate("drop", party)
+        p_corrupt = self.rate("corrupt", party)
+        p_delay = self.rate("delay", party)
+        if p_drop == p_corrupt == p_delay == 0.0:
+            return FaultEvent("ok", 0.0)
+        u_drop, u_corrupt, u_delay = _fault_draw(self.seed, tag, party, attempt)
+        if u_drop < p_drop:
+            return FaultEvent("drop", 0.0)
+        if u_corrupt < p_corrupt:
+            return FaultEvent("corrupt", 0.0)
+        if p_delay > 0.0 and u_delay < p_delay:
+            # deterministic magnitude: the sub-uniform position within the
+            # delay event, scaled to (0, delay_s]
+            d = (u_delay / p_delay) * self.delay_s
+            if d > self.timeout_s:
+                return FaultEvent("timeout", self.timeout_s)
+            return FaultEvent("ok", d)
+        return FaultEvent("ok", 0.0)
+
+    def backoff_s(self, failures: int) -> float:
+        """Capped exponential backoff after the ``failures``-th failed
+        attempt (1-indexed)."""
+        return min(self.backoff_cap_s,
+                   self.backoff_base_s * (2.0 ** max(failures - 1, 0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One attempt's outcome: ``status`` in ok|drop|corrupt|timeout plus the
+    simulated latency the attempt accrued."""
+
+    status: str
+    delay_s: float
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+@dataclasses.dataclass
+class TransportStats:
+    """Cumulative census of everything a :class:`Transport` delivered."""
+
+    attempts: int = 0
+    delivered: int = 0
+    retries: int = 0
+    drops: int = 0
+    corrupts: int = 0
+    timeouts: int = 0
+    exhausted: int = 0
+    units_base: int = 0
+    units_retried: int = 0
+    sim_time_s: float = 0.0
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeliveryReport:
+    """The outcome of delivering one :class:`~repro.core.comm.CommSchedule`.
+
+    ``failed`` maps party -> :class:`DroppedParty` for parties that
+    exhausted their retries (only possible with ``drop_on_exhaust=True``;
+    otherwise delivery raises).  ``units`` is the total billed — base
+    schedule plus every retransmission."""
+
+    units_base: int
+    units_retried: int
+    retries: int
+    failed: Mapping[int, DroppedParty]
+    sim_time_s: float
+
+    @property
+    def units(self) -> int:
+        return self.units_base + self.units_retried
+
+
+class Transport:
+    """The delivery seam between a :class:`CommSchedule` and its ledger.
+
+    ``deliver`` walks the schedule's ops in order.  Each op is attempted up
+    to ``1 + max_retries`` times (``max_retries=0`` under
+    ``fault_policy="fail"``): the successful transmission bills the op
+    under its own tag (so base-tag totals are EXACTLY the fault-free
+    bill), and every failed transmission bills the op's full units under
+    ``retry/<tag>`` — retransmissions are real traffic and the composed
+    bill stays exact.  Ledger entry order is chronological (failures
+    before the success), which degenerates to exactly
+    ``schedule.record(ledger)`` when no fault fires.
+
+    One transport instance accumulates :class:`TransportStats` across every
+    schedule it delivers (a build, a tree's lifetime, a whole service), so
+    the chaos benchmark reads retry counts and simulated latency off the
+    same object it injected.
+    """
+
+    def __init__(self, plan: Optional[FaultPlan] = None) -> None:
+        self.plan = plan if plan is not None else FaultPlan.none()
+        self.stats = TransportStats()
+
+    def deliver(
+        self,
+        schedule: CommSchedule,
+        ledger: Optional[CommLedger] = None,
+        *,
+        max_retries: Optional[int] = None,
+        drop_on_exhaust: bool = False,
+    ) -> DeliveryReport:
+        """Deliver every op; returns the report.  ``max_retries`` overrides
+        the plan's (``0`` = fail-fast, the ``fault_policy="fail"`` mode).
+        ``drop_on_exhaust=True`` (the ``degrade`` scoring round) records an
+        exhausted party in ``report.failed`` and SKIPS its remaining ops in
+        this schedule instead of raising :exc:`PartyUnavailable`."""
+        plan = self.plan
+        retries_cap = plan.max_retries if max_retries is None else int(max_retries)
+        stats = self.stats
+        failed: Dict[int, DroppedParty] = {}
+        units_base = 0
+        units_retried = 0
+        retries = 0
+        sim0 = stats.sim_time_s
+        for op in schedule.ops:
+            if op.party in failed:
+                continue                     # the party is gone for this round
+            attempts = 0
+            while True:
+                ev = plan.decide(op.tag, op.party, attempts)
+                attempts += 1
+                stats.attempts += 1
+                stats.sim_time_s += ev.delay_s
+                if ev.ok:
+                    if ledger is not None:
+                        if op.down:
+                            ledger.server_to_party(op.tag, op.party, op.units)
+                        else:
+                            ledger.party_to_server(op.tag, op.party, op.units)
+                    stats.delivered += 1
+                    stats.units_base += op.units
+                    units_base += op.units
+                    break
+                # failed transmission: the bytes still crossed the link
+                if ledger is not None:
+                    rtag = f"retry/{op.tag}"
+                    if op.down:
+                        ledger.server_to_party(rtag, op.party, op.units)
+                    else:
+                        ledger.party_to_server(rtag, op.party, op.units)
+                stats.units_retried += op.units
+                units_retried += op.units
+                setattr(stats, {"drop": "drops", "corrupt": "corrupts",
+                                "timeout": "timeouts"}[ev.status],
+                        getattr(stats, {"drop": "drops", "corrupt": "corrupts",
+                                        "timeout": "timeouts"}[ev.status]) + 1)
+                if attempts > retries_cap:
+                    stats.exhausted += 1
+                    if drop_on_exhaust:
+                        failed[op.party] = DroppedParty(op.party, op.tag,
+                                                       attempts)
+                        break
+                    raise PartyUnavailable(op.party, op.tag, attempts)
+                retries += 1
+                stats.retries += 1
+                stats.sim_time_s += plan.backoff_s(attempts)
+        return DeliveryReport(
+            units_base=units_base, units_retried=units_retried,
+            retries=retries, failed=failed,
+            sim_time_s=stats.sim_time_s - sim0,
+        )
+
+
+def deliver_or_record(
+    schedule: CommSchedule,
+    ledger: Optional[CommLedger],
+    transport: Optional[Transport],
+    *,
+    max_retries: Optional[int] = None,
+    drop_on_exhaust: bool = False,
+) -> DeliveryReport:
+    """The one helper every executor bills through: with no transport this
+    IS ``schedule.record(ledger)`` (bit-identical entries, zero overhead);
+    with one, delivery goes through the fault plan."""
+    if transport is None:
+        schedule.record(ledger)
+        return DeliveryReport(units_base=schedule.total, units_retried=0,
+                              retries=0, failed={}, sim_time_s=0.0)
+    return transport.deliver(schedule, ledger, max_retries=max_retries,
+                             drop_on_exhaust=drop_on_exhaust)
+
+
+# --------------------------------------------------------------------------
+# StreamCheckpoint: per-superchunk resume state for the streaming engines
+# --------------------------------------------------------------------------
+
+def _to_host(tree):
+    import jax
+
+    return jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+
+def _to_device(tree):
+    import jax
+    import jax.numpy as jnp
+
+    return jax.tree_util.tree_map(lambda x: jnp.asarray(x), tree)
+
+
+class StreamCheckpoint:
+    """Per-superchunk checkpoint of one streaming/pipelined build.
+
+    The streaming scorers' scan passes are pure folds over superchunks:
+    checkpointing ``(chunks_done, accumulator)`` after every superchunk
+    step makes the whole build resumable — restore the accumulator bitwise,
+    continue the fold at ``chunks_done``, and every downstream value (mass
+    table, scores, DIS draws) is IDENTICAL to an uninterrupted run, because
+    the scan never consumes PRNG state (the threefry chain is a pure
+    function of the input key, untouched by how many times the data pass
+    restarted).
+
+    ``bind(signature)`` ties the checkpoint to one build's identity (task,
+    geometry, knobs, key bytes) — a signature change discards stale state,
+    so one long-lived store per tenant is safe.  Carries are host-ified
+    (numpy) on save so the state survives device loss; phases are the
+    scorer passes (``gram`` / ``centers`` / ``stats`` / ``mass``).
+    """
+
+    def __init__(self) -> None:
+        self.signature: Optional[tuple] = None
+        self._phases: Dict[str, Tuple[int, Any]] = {}
+        self.saves = 0
+        self.resumes = 0
+
+    def bind(self, signature: tuple) -> None:
+        if self.signature != signature:
+            self.signature = signature
+            self._phases.clear()
+
+    def save(self, phase: str, chunks_done: int, carry: Any) -> None:
+        self._phases[phase] = (int(chunks_done), _to_host(carry))
+        self.saves += 1
+
+    def load(self, phase: str) -> Optional[Tuple[int, Any]]:
+        saved = self._phases.get(phase)
+        if saved is None:
+            return None
+        self.resumes += 1
+        return saved[0], _to_device(saved[1])
+
+    def clear(self) -> None:
+        self.signature = None
+        self._phases.clear()
+
+    def __contains__(self, phase: str) -> bool:
+        return phase in self._phases

@@ -52,6 +52,8 @@ SCORE_BACKENDS = ("pallas", "ref", "norm")
 
 ENGINES = ("materialized", "batched", "streamed", "pipelined")
 
+FAULT_POLICIES = ("fail", "retry", "degrade")
+
 # superchunk width when chunk_blocks is not given: deep enough to amortise
 # the per-dispatch overhead, shallow enough that two prefetch slots + one
 # resident superchunk stay a small multiple of the single-block footprint
@@ -102,6 +104,7 @@ class CoresetSpec:
     memory_budget_bytes: Optional[int] = None
     sharded_masses: bool = False          # mass table via shard_map over `data`
     m_cap: Optional[int] = None           # batched draw capacity override
+    fault_policy: str = "fail"            # fail | retry | degrade (faults.py)
     params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self) -> None:
@@ -181,6 +184,17 @@ class CoresetSpec:
                     f"budgets {over} outside [1, m_cap={self.m_cap}]; every "
                     f"budget must be >= 1 and <= the draw capacity"
                 )
+        if self.fault_policy not in FAULT_POLICIES:
+            raise ValueError(
+                f"fault_policy must be one of {FAULT_POLICIES}, "
+                f"got {self.fault_policy!r}"
+            )
+        if self.fault_policy != "fail" and self.engine == "batched":
+            raise ValueError(
+                f"fault_policy={self.fault_policy!r} delivers per-round "
+                f"schedules through a transport; the batched engine bills "
+                f"its cells lazily and cannot combine with it"
+            )
         object.__setattr__(self, "params", dict(self.params))
 
     # -- conveniences --------------------------------------------------------
@@ -304,7 +318,7 @@ class ExecutionPlan:
             + (" +sharded_masses" if spec.sharded_masses else ""),
             f"  task={self.task_name} backend={self.backend} "
             f"grid={self.grid[0]}x{self.grid[1]} budgets={spec.budgets} "
-            f"m_cap={self.m_cap}",
+            f"m_cap={self.m_cap} fault_policy={spec.fault_policy}",
             f"  data: n={self.n} T={self.T} s={self.stacked_width} "
             f"blocks: {self.nb} x {self.bs} rows "
             f"(block_size={spec.block_size})",
@@ -359,12 +373,31 @@ class PlanCache:
     not match the dataset), so sharing one cache across tenants/datasets is
     safe: different shapes occupy different keys.  ``spec.params`` values
     must be hashable (the shipped task knobs — ints/floats — are).
+
+    ``max_entries`` bounds the cache LRU-style: a long-lived service seeing
+    an unbounded variety of shapes (many tenants, many chunk sizes) evicts
+    the least-recently-USED plan instead of growing forever.  Evicting a
+    plan only costs a recompile on the next miss — correctness is
+    unaffected.  ``evictions`` counts them; :meth:`stats` is the
+    one-call census the serving layer surfaces.
     """
 
-    def __init__(self) -> None:
-        self._plans: dict = {}
+    DEFAULT_MAX_ENTRIES = 256
+
+    def __init__(self, max_entries: Optional[int] = None) -> None:
+        from collections import OrderedDict
+
+        if max_entries is None:
+            max_entries = self.DEFAULT_MAX_ENTRIES
+        if not _is_int(max_entries) or max_entries < 1:
+            raise ValueError(
+                f"max_entries must be a positive int, got {max_entries!r}"
+            )
+        self.max_entries = int(max_entries)
+        self._plans: "OrderedDict[tuple, ExecutionPlan]" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     @staticmethod
     def key(spec: CoresetSpec, ds: VFLDataset) -> tuple:
@@ -374,7 +407,8 @@ class PlanCache:
             spec.engine, spec.backend, spec.jit, spec.budgets,
             spec.num_seeds, spec.block_size, spec.chunk_blocks,
             spec.prefetch, spec.memory_budget_bytes, spec.sharded_masses,
-            spec.m_cap, tuple(sorted(spec.params.items())),
+            spec.m_cap, spec.fault_policy,
+            tuple(sorted(spec.params.items())),
         )
 
     def get(self, spec: CoresetSpec, ds: VFLDataset) -> "ExecutionPlan":
@@ -384,8 +418,12 @@ class PlanCache:
             self.misses += 1
             plan = compile_plan(spec, ds)
             self._plans[k] = plan
+            if len(self._plans) > self.max_entries:
+                self._plans.popitem(last=False)      # least recently used
+                self.evictions += 1
         else:
             self.hits += 1
+            self._plans.move_to_end(k)
         return plan
 
     def __len__(self) -> int:
@@ -393,6 +431,15 @@ class PlanCache:
 
     def clear(self) -> None:
         self._plans.clear()
+
+    def stats(self) -> dict:
+        return {
+            "size": len(self._plans),
+            "max_entries": self.max_entries,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }
 
 
 # --------------------------------------------------------------------------
@@ -453,6 +500,12 @@ def compile_plan(spec: CoresetSpec, ds: VFLDataset) -> ExecutionPlan:
             raise ValueError(
                 f"engine={spec.engine!r} builds one coreset per call; a "
                 f"{R}x{M} grid requires engine='batched' (or 'auto')"
+            )
+        if spec.fault_policy != "fail":
+            raise ValueError(
+                f"fault_policy={spec.fault_policy!r} delivers per-round "
+                f"schedules through a transport; the batched engine bills "
+                f"its cells lazily and cannot combine with it"
             )
         engine = "batched"
         if spec.engine == "auto":

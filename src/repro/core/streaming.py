@@ -72,6 +72,7 @@ from repro.core.dis import (
     _head_draws_ok,
     _key_chain,
 )
+from repro.core.faults import StreamCheckpoint
 from repro.core.sensitivity import batched_gram_pinv, kmeans_update, norm_scores
 from repro.core.vfl import VFLDataset
 from repro.core.vkmc import kmeans
@@ -134,13 +135,19 @@ def make_stream_scorer(
     chunk_blocks: int = 1,
     prefetch: bool = False,
     masses: Optional[jax.Array] = None,
+    ckpt: Optional[StreamCheckpoint] = None,
     **params,
 ) -> StreamScorer:
     """Build the task's :class:`StreamScorer`.  ``masses`` (a precomputed
     (T, nb) block-mass table, e.g. from :func:`vrlr_block_masses_sharded`)
     skips the factory's own mass pass — the ``sharded_masses`` plan toggle:
     round 1 samples from the supplied table while per-row scores still come
-    from the scorer's block recomputation."""
+    from the scorer's block recomputation.  ``ckpt`` (a bound
+    :class:`~repro.core.faults.StreamCheckpoint`) makes every data pass
+    resumable: the accumulator + completed-chunk counter is saved after
+    each superchunk (or block), and a restarted build with the same ckpt
+    continues the fold where it died, draw-identical to an uninterrupted
+    run.  ``ckpt=None`` leaves the scan paths untouched."""
     factory = STREAM_SCORERS.get(name)
     if factory is None:
         raise ValueError(
@@ -149,11 +156,27 @@ def make_stream_scorer(
         )
     return factory(key, ds, block_size, backend, probe=probe,
                    chunk_blocks=chunk_blocks, prefetch=prefetch,
-                   masses=masses, **params)
+                   masses=masses, ckpt=ckpt, **params)
 
 
 def _noop() -> None:
     return None
+
+
+def _ckpt_load(ckpt: Optional[StreamCheckpoint], phase: str):
+    """(resume chunk counter, restored carry-or-None) for one scan phase.
+    A completed phase resumes past the end of the traversal, so its loop
+    body never re-runs and the carry is the pass's final accumulator."""
+    if ckpt is None:
+        return 0, None
+    saved = ckpt.load(phase)
+    return (0, None) if saved is None else saved
+
+
+def _ckpt_save(ckpt: Optional[StreamCheckpoint], phase: str, done: int,
+               carry) -> None:
+    if ckpt is not None:
+        ckpt.save(phase, done, carry)
 
 
 def _row_valid(bs: int, nvalid) -> jax.Array:
@@ -269,28 +292,33 @@ def _norm_score_batch(batch, nvalids, n):
         batch, nvalids)
 
 
-def _mass_table(ds, block_size, score_block, probe):
+def _mass_table(ds, block_size, score_block, probe, ckpt=None):
     """One pass over the blocks collecting the (T, nb) block-mass table."""
     nb, _ = ds.block_geometry(block_size)
-    masses = []
-    for b in range(nb):
+    start, saved = _ckpt_load(ckpt, "mass")
+    masses = list(saved) if saved is not None else []
+    for b in range(start, nb):
         masses.append(jnp.sum(score_block(b), axis=1))
+        _ckpt_save(ckpt, "mass", b + 1, tuple(masses))
         probe()
     return jnp.stack(masses, axis=1)                       # (T, nb)
 
 
 def _chunked_mass_table(ds, block_size, chunk_blocks, prefetch, probe,
-                        with_labels, mass_chunk):
+                        with_labels, mass_chunk, ckpt=None):
     """The mass-table pass at superchunk granularity: one jitted scan
     dispatch per (C, T, bs, s) superchunk, blocks prefetched double-buffered.
     Column b is bitwise :func:`_mass_table`'s column b (same per-block score
     + sum, same order); trailing zero-padded blocks are sliced away."""
     nb, _ = ds.block_geometry(block_size)
-    cols = []
-    for _, chunk, nvalids in ds.blocks_prefetched(
-            block_size, with_labels, chunk_blocks, prefetch):
+    start, saved = _ckpt_load(ckpt, "mass")
+    cols = list(saved) if saved is not None else []
+    for b0, chunk, nvalids in ds.blocks_prefetched(
+            block_size, with_labels, chunk_blocks, prefetch,
+            start_chunk=start):
         cols.append(mass_chunk(chunk, jnp.asarray(nvalids)))   # (T, C)
         del chunk            # drop the slot before the next one is staged
+        _ckpt_save(ckpt, "mass", b0 // chunk_blocks + 1, tuple(cols))
         probe()
     return jnp.concatenate(cols, axis=1)[:, :nb]
 
@@ -301,6 +329,7 @@ def vrlr_stream_scorer(
     probe: Optional[Callable[[], None]] = None, rcond: float = 1e-6,
     chunk_blocks: int = 1, prefetch: bool = False,
     masses: Optional[jax.Array] = None,
+    ckpt: Optional[StreamCheckpoint] = None,
 ) -> StreamScorer:
     """Algorithm 2's scores without ever holding (n, d): one block-scan pass
     accumulates each party's (s, s) Gram, the eigen-pseudo-inverse is taken
@@ -335,24 +364,32 @@ def vrlr_stream_scorer(
             if pipelined:
                 masses = _chunked_mass_table(
                     ds, block_size, C, prefetch, probe, True,
-                    lambda chunk, nv: _norm_mass_chunk(chunk, nv, float(n)))
+                    lambda chunk, nv: _norm_mass_chunk(chunk, nv, float(n)),
+                    ckpt=ckpt)
             else:
-                masses = _mass_table(ds, block_size, score_block, probe)
+                masses = _mass_table(ds, block_size, score_block, probe,
+                                     ckpt=ckpt)
             passes = 1
         else:
             passes = 0
     else:
-        G = jnp.zeros((ds.T, s, s), jnp.float32)
+        start, saved = _ckpt_load(ckpt, "gram")
+        G = saved if saved is not None else jnp.zeros((ds.T, s, s),
+                                                      jnp.float32)
         if pipelined:
-            for _, chunk, nvalids in ds.blocks_prefetched(
-                    block_size, True, C, prefetch):
+            for b0, chunk, nvalids in ds.blocks_prefetched(
+                    block_size, True, C, prefetch, start_chunk=start):
                 G = _gram_chunk(G, chunk, jnp.asarray(nvalids),
                                 use_kernel=use_kernel)
                 del chunk    # drop the slot before the next one is staged
+                _ckpt_save(ckpt, "gram", b0 // C + 1, G)
                 probe()
         else:
-            for _, blk, nvalid in ds.blocks(block_size, with_labels=True):
+            for b, blk, nvalid in ds.blocks(block_size, with_labels=True):
+                if b < start:
+                    continue
                 G = _gram_step(G, blk, nvalid, use_kernel=use_kernel)
+                _ckpt_save(ckpt, "gram", b + 1, G)
                 probe()
         M = batched_gram_pinv(G, rcond)
 
@@ -372,9 +409,11 @@ def vrlr_stream_scorer(
                 masses = _chunked_mass_table(
                     ds, block_size, C, prefetch, probe, True,
                     lambda chunk, nv: _vrlr_mass_chunk(chunk, M, nv, float(n),
-                                                       use_kernel=use_kernel))
+                                                       use_kernel=use_kernel),
+                    ckpt=ckpt)
             else:
-                masses = _mass_table(ds, block_size, score_block, probe)
+                masses = _mass_table(ds, block_size, score_block, probe,
+                                     ckpt=ckpt)
             passes = 2
         else:
             passes = 1           # the Gram pass still ran; the mass pass didn't
@@ -514,6 +553,7 @@ def vkmc_stream_scorer(
     center_sample: int = 16384,
     chunk_blocks: int = 1, prefetch: bool = False,
     masses: Optional[jax.Array] = None,
+    ckpt: Optional[StreamCheckpoint] = None,
 ) -> StreamScorer:
     """Algorithm 3's sensitivities with only one superchunk resident.
 
@@ -549,9 +589,11 @@ def vkmc_stream_scorer(
             if pipelined:
                 masses = _chunked_mass_table(
                     ds, block_size, C, prefetch, probe, False,
-                    lambda chunk, nv: _norm_mass_chunk(chunk, nv, float(n)))
+                    lambda chunk, nv: _norm_mass_chunk(chunk, nv, float(n)),
+                    ckpt=ckpt)
             else:
-                masses = _mass_table(ds, block_size, score_block, probe)
+                masses = _mass_table(ds, block_size, score_block, probe,
+                                     ckpt=ckpt)
             passes = 1
         else:
             passes = 0
@@ -564,22 +606,30 @@ def vkmc_stream_scorer(
         key, ds, k=k, local_iters=local_iters, center_sample=center_sample,
         use_kernel=use_kernel)
 
-    csize = jnp.zeros((T, k), jnp.float32)
-    ccost = jnp.zeros((T, k), jnp.float32)
+    start, saved = _ckpt_load(ckpt, "stats")
+    if saved is not None:
+        csize, ccost = saved
+    else:
+        csize = jnp.zeros((T, k), jnp.float32)
+        ccost = jnp.zeros((T, k), jnp.float32)
     if pipelined:
-        for _, chunk, nvalids in ds.blocks_prefetched(
-                block_size, False, C, prefetch):
+        for b0, chunk, nvalids in ds.blocks_prefetched(
+                block_size, False, C, prefetch, start_chunk=start):
             csize, ccost = _vkmc_stats_chunk(csize, ccost, chunk, centers,
                                              jnp.asarray(nvalids),
                                              use_kernel=use_kernel)
             del chunk        # drop the slot before the next one is staged
+            _ckpt_save(ckpt, "stats", b0 // C + 1, (csize, ccost))
             probe()
     else:
-        for _, blk, nvalid in ds.blocks(block_size, with_labels=False):
+        for b, blk, nvalid in ds.blocks(block_size, with_labels=False):
+            if b < start:
+                continue
             ws, cc = _vkmc_stats_step(blk, centers, nvalid,
                                       use_kernel=use_kernel)
             csize = csize + ws
             ccost = ccost + cc
+            _ckpt_save(ckpt, "stats", b + 1, (csize, ccost))
             probe()
 
     def score_block(b: int) -> jax.Array:
@@ -599,9 +649,11 @@ def vkmc_stream_scorer(
                 ds, block_size, C, prefetch, probe, False,
                 lambda chunk, nv: _vkmc_mass_chunk(chunk, centers, csize,
                                                    ccost, nv, float(alpha),
-                                                   use_kernel=use_kernel))
+                                                   use_kernel=use_kernel),
+                ckpt=ckpt)
         else:
-            masses = _mass_table(ds, block_size, score_block, probe)
+            masses = _mass_table(ds, block_size, score_block, probe,
+                                 ckpt=ckpt)
         passes = 3
     else:
         passes = 2               # centers + stats passes ran; masses supplied

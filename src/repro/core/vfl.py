@@ -86,7 +86,16 @@ class VFLDataset:
     y: Optional[jnp.ndarray] = None     # (n,), stored at party T-1
 
     def __post_init__(self) -> None:
+        if not self.parts:
+            raise ValueError(
+                "VFLDataset needs at least one party (parts is empty)"
+            )
         n = self.parts[0].shape[0]
+        if n == 0:
+            raise ValueError(
+                "VFLDataset needs at least one row (n=0); every protocol "
+                "downstream scores and samples rows"
+            )
         for j, p in enumerate(self.parts):
             if p.ndim != 2 or p.shape[0] != n:
                 raise ValueError(f"party {j}: bad shape {p.shape}")
@@ -238,6 +247,7 @@ class VFLDataset:
     def blocks_prefetched(
         self, block_size: int, with_labels: bool = False,
         chunk_blocks: int = 1, prefetch: bool = True,
+        start_chunk: int = 0,
     ) -> Iterator[Tuple[int, jnp.ndarray, np.ndarray]]:
         """Iterate ``(b0, chunk (C, T, bs, s) device array, nvalids (C,))``
         over superchunks of ``chunk_blocks`` row blocks — the double-buffered
@@ -256,12 +266,21 @@ class VFLDataset:
         at most two slots are live regardless of n.  Block contents and
         ordering are identical to :meth:`blocks`; only the transfer
         granularity and overlap change.
+
+        ``start_chunk`` skips the first superchunks entirely (no staging, no
+        transfer) — the checkpointed-resume entry point: a restored scan
+        continues at the first unprocessed superchunk and sees exactly the
+        buffers a full traversal would have yielded from there.
         """
         widths, s = self.stacked_widths(with_labels)
         nb, bs = self.block_geometry(block_size)
         if chunk_blocks < 1:
             raise ValueError(f"chunk_blocks must be >= 1, got {chunk_blocks}")
         nchunks = -(-nb // chunk_blocks)
+        if not 0 <= start_chunk <= nchunks:
+            raise ValueError(
+                f"start_chunk {start_chunk} out of range [0, {nchunks}]"
+            )
         dt = self._staging_dtype(with_labels)
 
         def stage(c: int):
@@ -271,13 +290,15 @@ class VFLDataset:
             return jax.device_put(buf), nvalids          # async: returns now
 
         if not prefetch:
-            for c in range(nchunks):
+            for c in range(start_chunk, nchunks):
                 dev, nvalids = stage(c)
                 yield c * chunk_blocks, dev, nvalids
                 del dev                       # drop the slot before restaging
             return
-        nxt = stage(0)
-        for c in range(nchunks):
+        if start_chunk >= nchunks:
+            return
+        nxt = stage(start_chunk)
+        for c in range(start_chunk, nchunks):
             cur = nxt
             # issue the NEXT transfer before handing the current chunk to the
             # consumer — the copy proceeds while the consumer's dispatch runs
@@ -309,6 +330,23 @@ class VFLDataset:
     def rows(self, idx: jnp.ndarray) -> "VFLDataset":
         y = None if self.y is None else self.y[idx]
         return VFLDataset([p[idx] for p in self.parts], y)
+
+    def select_parties(self, parties: Sequence[int]) -> "VFLDataset":
+        """The SAME rows restricted to a party subset — the surviving
+        federation of a degraded build (:mod:`repro.core.faults`).  Labels
+        survive only if the label holder (party T-1) is among ``parties``;
+        order follows ``parties`` (keep it sorted to preserve the paper's
+        party numbering)."""
+        ids = [int(j) for j in parties]
+        if not ids:
+            raise ValueError("select_parties needs at least one party")
+        bad = [j for j in ids if not 0 <= j < self.T]
+        if bad:
+            raise ValueError(f"parties {bad} out of range [0, {self.T})")
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate parties in {ids}")
+        y = self.y if (self.T - 1) in ids else None
+        return VFLDataset([self.parts[j] for j in ids], y)
 
     @staticmethod
     def from_dense(X, y=None, T: int = 3, sizes: Optional[Sequence[int]] = None) -> "VFLDataset":

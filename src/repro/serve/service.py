@@ -38,6 +38,7 @@ import numpy as np
 from repro.core.api import CoresetTask, build_coresets_batched, get_task
 from repro.core.comm import CommLedger
 from repro.core.coreset import Coreset, MaterializedCoreset
+from repro.core.faults import StreamCheckpoint, Transport
 from repro.core.plan import PlanCache
 from repro.core.vfl import VFLDataset
 from repro.serve.tree import CoresetTree, InsertStats
@@ -131,10 +132,22 @@ class CoresetService:
         chunk_blocks: Optional[int] = None,
         prefetch: Optional[bool] = None,
         headroom: int = 2,
+        fault_policy: str = "fail",
+        transport: Optional[Transport] = None,
+        checkpoint: bool = False,
         **params: Any,
     ) -> TenantState:
         """Create a tenant: its tree, ledger, and key chain.  Deterministic —
-        the same (seed/key, insert sequence) replays the same coresets."""
+        the same (seed/key, insert sequence) replays the same coresets.
+
+        ``fault_policy``/``transport`` route the tenant's leaf builds and
+        merges through the party fault seam (see :mod:`repro.core.faults`);
+        ``checkpoint=True`` gives the tenant a persistent
+        :class:`~repro.core.faults.StreamCheckpoint`, so an insert that
+        crashes mid-build (and is rolled back by the tree) RESUMES its scan
+        passes at the last completed superchunk when the chunk is retried —
+        draw-identical to a never-failed insert.
+        """
         if tenant in self._tenants:
             raise ValueError(f"tenant {tenant!r} already registered")
         if key is None:
@@ -143,7 +156,9 @@ class CoresetService:
             task, budget, key=key, backend=self.backend,
             block_size=block_size, chunk_blocks=chunk_blocks,
             prefetch=prefetch, params=params, plan_cache=self.plan_cache,
-            headroom=headroom,
+            headroom=headroom, fault_policy=fault_policy,
+            transport=transport,
+            checkpoint=StreamCheckpoint() if checkpoint else None,
         )
         state = TenantState(name=tenant, tree=tree)
         self._tenants[tenant] = state
@@ -170,7 +185,31 @@ class CoresetService:
 
     def insert(self, tenant: str, parts: Sequence[Any],
                y: Optional[Any] = None) -> InsertReceipt:
+        """Absorb one superchunk into the tenant's tree.
+
+        Validates the chunk at the service edge — a malformed request fails
+        with a clear error BEFORE any tree state is touched (the tree's own
+        insert is additionally crash-safe: a failure mid-build rolls back).
+        """
         st = self.state(tenant)
+        parts = list(parts)
+        if not parts:
+            raise ValueError(
+                f"insert for tenant {tenant!r} got an empty parts list; "
+                f"a superchunk needs one feature slice per party"
+            )
+        rows = [int(np.asarray(p).shape[0]) for p in parts]
+        if rows[0] == 0:
+            raise ValueError(
+                f"insert for tenant {tenant!r} got a zero-row superchunk; "
+                f"send at least one row per chunk"
+            )
+        if len(set(rows)) != 1:
+            raise ValueError(
+                f"insert for tenant {tenant!r}: parties disagree on the "
+                f"chunk's row count ({rows}); every party must slice the "
+                f"same rows"
+            )
         hits0 = self.plan_cache.hits
         t0 = time.perf_counter()
         stats = st.tree.insert(parts, y)
@@ -266,11 +305,14 @@ class CoresetService:
     # -- introspection -------------------------------------------------------
 
     def stats(self) -> Dict[str, Any]:
+        pc = self.plan_cache.stats()
         return {
             "tenants": len(self._tenants),
-            "plan_cache_size": len(self.plan_cache),
-            "plan_hits": self.plan_cache.hits,
-            "plan_misses": self.plan_cache.misses,
+            "plan_cache_size": pc["size"],
+            "plan_cache_max": pc["max_entries"],
+            "plan_hits": pc["hits"],
+            "plan_misses": pc["misses"],
+            "plan_evictions": pc["evictions"],
             "batched_flushes": self.batched_flushes,
             "batched_cells": self.batched_cells,
             "pending": len(self._pending),

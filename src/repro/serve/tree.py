@@ -54,6 +54,7 @@ from repro.core.api import CoresetPipeline, CoresetTask, get_task, resolve_backe
 from repro.core.comm import CommLedger, CommSchedule
 from repro.core.coreset import MaterializedCoreset
 from repro.core.dis import dis_plan_full, uniform_plan
+from repro.core.faults import StreamCheckpoint, Transport, deliver_or_record
 from repro.core.plan import CoresetSpec, PlanCache
 from repro.core.vfl import VFLDataset
 
@@ -68,6 +69,8 @@ def merge_reduce(
     params: Optional[Mapping[str, Any]] = None,
     ledger: Optional[CommLedger] = None,
     bill_consume: bool = True,
+    transport: Optional[Transport] = None,
+    fault_policy: str = "fail",
 ) -> MaterializedCoreset:
     """One merge-and-reduce step: re-run DIS over the weighted union of
     ``mats``, weights folded into the sensitivities.
@@ -86,6 +89,13 @@ def merge_reduce(
     receives the union's indices and returns its per-row shares) — then the
     union re-sample's own DIS (or uniform) schedule.  The returned node's
     ``comm_units`` composes: children's totals + this op's bill.
+
+    ``transport`` delivers the schedule through the party fault seam
+    (retries billed under ``retry/`` tags, composed into ``comm_units``).
+    A merge NEVER degrades — every child row already carries all T
+    parties' feature slices, so dropping a party here would orphan the
+    materialized columns; under ``fault_policy="degrade"`` a merge behaves
+    like ``"retry"`` and raises on exhaustion.
     """
     task = get_task(task)
     params = dict(params or {})
@@ -129,13 +139,17 @@ def merge_reduce(
         # merge(T, a, b) bills per consumed row, so folding k children into
         # (sum of first k-1, last) charges exactly sum_i 2*m_i*T
         schedule = CommSchedule.merge(T, sum(sizes[:-1]), sizes[-1]) + schedule
-    schedule.record(ledger)
+    rep = deliver_or_record(
+        schedule, ledger, transport,
+        max_retries=0 if fault_policy == "fail" else None,
+        drop_on_exhaust=False,
+    )
     return MaterializedCoreset(
         indices=union.indices[S],
         weights=weights.astype(union.weights.dtype),
         parts=[p[S] for p in union.parts],
         y=None if union.y is None else union.y[S],
-        comm_units=union.comm_units + schedule.total,
+        comm_units=union.comm_units + rep.units,
     )
 
 
@@ -209,6 +223,9 @@ class CoresetTree:
         plan_cache: Optional[PlanCache] = None,
         ledger: Optional[CommLedger] = None,
         headroom: int = 2,
+        fault_policy: str = "fail",
+        transport: Optional[Transport] = None,
+        checkpoint: Optional[StreamCheckpoint] = None,
     ) -> None:
         self.task = get_task(task)
         self.budget = int(budget)
@@ -225,6 +242,9 @@ class CoresetTree:
         self.prefetch = prefetch
         self.params = dict(params or {})
         self.plan_cache = plan_cache
+        self.fault_policy = str(fault_policy)
+        self.transport = transport
+        self.checkpoint = checkpoint
         self.ledger = ledger if ledger is not None else CommLedger()
         self.levels: List[Optional[TreeNode]] = []
         self.num_chunks = 0
@@ -265,11 +285,45 @@ class CoresetTree:
         """Rows held across all occupied levels (the un-reduced query size)."""
         return sum(nd.cs.m for nd in self.levels if nd is not None)
 
+    # -- crash-safe snapshots ------------------------------------------------
+
+    def _snapshot(self):
+        """Everything one insert mutates: a shallow copy of the level slots
+        (nodes themselves are immutable once placed), the key-chain
+        counters, and a ledger rollback mark."""
+        return (list(self.levels), self.num_chunks, self.n_total,
+                self._merge_ops, self.ledger.mark())
+
+    def _restore(self, snap) -> None:
+        levels, num_chunks, n_total, merge_ops, mark = snap
+        self.levels = levels
+        self.num_chunks = num_chunks
+        self.n_total = n_total
+        self._merge_ops = merge_ops
+        self.ledger.rollback(mark)
+
     # -- the operations ------------------------------------------------------
 
     def insert(self, parts: Sequence[Any], y: Optional[Any] = None) -> InsertStats:
         """Absorb one superchunk: ONE pipelined leaf build over the chunk +
-        the binary-counter carry chain of merges.  Returns the census."""
+        the binary-counter carry chain of merges.  Returns the census.
+
+        Crash-safe: any failure mid-insert (a party exhausting its retries,
+        a killed process probe, OOM) rolls the tree back to its pre-insert
+        state — levels, key-chain counters, AND the ledger — so retrying
+        the same chunk replays the SAME leaf/merge keys and lands
+        draw-identically to a never-failed insert.  With a ``checkpoint``
+        bound, the retried leaf build additionally resumes its scan passes
+        at the last completed superchunk instead of restarting from row 0.
+        """
+        snap = self._snapshot()
+        try:
+            return self._insert(parts, y)
+        except BaseException:
+            self._restore(snap)
+            raise
+
+    def _insert(self, parts: Sequence[Any], y: Optional[Any]) -> InsertStats:
         t0 = time.perf_counter()
         led0 = self.ledger.total
         parts = [np.asarray(p) for p in parts]
@@ -282,11 +336,12 @@ class CoresetTree:
             task=self.task, budgets=self.node_budget, engine="pipelined",
             backend=self.backend, block_size=self.block_size,
             chunk_blocks=self.chunk_blocks, prefetch=self.prefetch,
-            params=self.params,
+            fault_policy=self.fault_policy, params=self.params,
         )
         pipe = CoresetPipeline(ds, plan_cache=self.plan_cache)
         cs = pipe.build(spec, key=self.leaf_key(self.num_chunks),
-                        ledger=self.ledger)
+                        ledger=self.ledger, transport=self.transport,
+                        checkpoint=self.checkpoint)
         node = TreeNode(
             level=0, chunks=1, rows=chunk_rows,
             cs=MaterializedCoreset.from_coreset(cs, ds, offset=self.n_total),
@@ -323,6 +378,7 @@ class CoresetTree:
             self.task, [left.cs, right.cs], self.node_budget,
             key=self.merge_key(self._merge_ops), backend=self.backend,
             params=self.params, ledger=self.ledger,
+            transport=self.transport, fault_policy=self.fault_policy,
         )
         self._merge_ops += 1
         return TreeNode(level=left.level + 1, chunks=left.chunks + right.chunks,
@@ -352,6 +408,7 @@ class CoresetTree:
             self.task, [nd.cs for nd in nodes], int(reduce_to),
             key=self.query_key() if key is None else key,
             backend=self.backend, params=self.params, ledger=self.ledger,
+            transport=self.transport, fault_policy=self.fault_policy,
         )
 
     def describe(self) -> str:

@@ -1,0 +1,309 @@
+"""Integrity benchmark: the checksummed wire under silent corruption.
+
+Three experiments, recorded under the ``integrity`` section of
+BENCH_kernels.json:
+
+* ``detect`` — envelope detection is total: for every silent-corruption
+  kind (sign / scale / nan), a verifying :class:`Transport` catches 100%
+  of perturbed payloads at the wire (``silent_detected ==
+  silent_corrupts``), every delivered array is byte-equal to the
+  original, and every retransmission is billed under ``retry/<tag>`` at
+  the message's exact units.  An end-to-end build through a corrupting
+  verified wire lands draw-identical to the clean build, paying only the
+  retry bill.
+* ``quarantine`` — the acceptance gate: party 0 sign-flips its round-1
+  mass table on EVERY send through an unverifying wire.  Undefended
+  (``fault_policy="retry"``: envelope checks off, values trusted) the
+  downstream ridge fit's rel_error blows past 3x the clean build's;
+  defended (``fault_policy="quarantine"``) the validators catch the
+  negative masses, drop party 0 via the degrade machinery, and the
+  rebuilt coreset's rel_error stays within 3x of clean (small absolute
+  floor for the both-tiny regime).  The receipt names the offender.
+* ``overhead`` — checksum cost: a warm pipelined build through a null
+  verifying transport (every payload sealed + digest-checked, zero
+  faults) stays within 5% of the transportless build's rows/s, and is
+  draw-identical to it.
+
+  PYTHONPATH=src python -m benchmarks.integrity --fast
+  PYTHONPATH=src python -m benchmarks.run --sections integrity --strict
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import write_bench_json, write_rows
+from benchmarks.serve import _chunk_stream, _stream_ds
+from repro.core import (
+    CommLedger,
+    CoresetPipeline,
+    CoresetSpec,
+    FaultPlan,
+    Transport,
+)
+from repro.core.faults import SILENT_KINDS
+from repro.core.solve import evaluate, fit_ridge, full_data_coreset
+
+BENCH = "integrity"
+SECTION = "integrity"
+
+DETECT_RATE = 0.4            # per-message corruption odds at the wire
+DETECT_RETRIES = 16          # 0.4^17 ~ 2e-7 exhaustion odds per message
+QUALITY_GATE = 3.0           # quarantined rel_error within 3x of clean
+REL_FLOOR = 0.02             # both-tiny regime: absolute floor on the gate
+POISON_N = 20_000            # the acceptance criterion's n
+OVERHEAD_GATE = 0.05         # checksum wire within 5% of transportless
+OVERHEAD_REPS = 5
+
+
+def _vrlr_stream(seed, n, d=12, T=3, num_chunks=4):
+    chunks = _chunk_stream(seed, num_chunks, n // num_chunks, d, T, True)
+    return chunks, _stream_ds(chunks)
+
+
+# --------------------------------------------------------------------------
+# Experiment 1: wire-level detection is total, per corruption kind
+# --------------------------------------------------------------------------
+
+def run_detect(fast: bool):
+    rounds = 100 if fast else 400
+    T, cells = 3, 64
+    rng = np.random.default_rng(0)
+    payloads = {j: rng.random((T, cells)).astype(np.float32) + 0.1
+                for j in range(T)}
+    units = {j: cells for j in range(T)}
+
+    entries, rows = [], []
+    for kind in SILENT_KINDS:
+        plan = FaultPlan(seed=31, silent_corrupt=DETECT_RATE,
+                         silent_kind=kind, max_retries=DETECT_RETRIES)
+        tr = Transport(plan)
+        led = CommLedger()
+        t0 = time.time()
+        for i in range(rounds):
+            delivered, failed = tr.ship(f"detect/{kind}/r{i}", payloads,
+                                        led, units=units)
+            if failed:
+                raise AssertionError(f"{kind}: exhaustion at round {i} "
+                                     f"despite {DETECT_RETRIES} retries")
+            for j, arr in delivered.items():
+                if not np.array_equal(np.asarray(arr), payloads[j]):
+                    raise AssertionError(
+                        f"{kind}: party {j} delivered a corrupted payload "
+                        f"through a VERIFYING wire at round {i}")
+        wall = time.time() - t0
+        st = tr.stats
+        if st.silent_corrupts == 0:
+            raise AssertionError(f"{kind}: the plan never corrupted "
+                                 f"anything across {rounds} rounds")
+        if st.silent_detected != st.silent_corrupts:
+            raise AssertionError(
+                f"{kind}: {st.silent_corrupts} corruptions but only "
+                f"{st.silent_detected} detected — the digest missed some")
+        retry_bill = led.by_prefix("retry/")
+        if retry_bill != st.units_retried or retry_bill != cells * st.silent_detected:
+            raise AssertionError(
+                f"{kind}: retry bill {retry_bill} != "
+                f"{cells} units x {st.silent_detected} detections")
+        entries.append({
+            "kind": "detect", "corrupt_kind": kind, "rounds": rounds,
+            "messages": rounds * T, "corrupts": st.silent_corrupts,
+            "detected": st.silent_detected, "detection_rate": 1.0,
+            "retry_units": retry_bill,
+        })
+        rows.append({
+            "bench": BENCH, "method": f"detect-{kind}", "size": rounds * T,
+            "cost_mean": 1.0, "cost_std": 0.0, "comm": retry_bill,
+            "wall_s": round(wall, 3),
+        })
+
+    # end-to-end: a corrupting verified wire is draw-identical to clean,
+    # and the build's bill is exactly clean + the retransmissions
+    _, ds = _vrlr_stream(21, 8192 if fast else 32768)
+    key = jax.random.PRNGKey(17)
+    spec = CoresetSpec(task="vrlr", budgets=256, engine="materialized",
+                       backend="ref", fault_policy="retry")
+    led0 = CommLedger()
+    cs0 = CoresetPipeline(ds).build(spec, key=key, ledger=led0)
+    tr = Transport(FaultPlan(seed=47, silent_corrupt=0.3, silent_kind="sign",
+                             max_retries=DETECT_RETRIES))
+    led = CommLedger()
+    cs = CoresetPipeline(ds).build(spec, key=key, ledger=led, transport=tr)
+    if not (np.array_equal(np.asarray(cs.indices), np.asarray(cs0.indices))
+            and np.array_equal(np.asarray(cs.weights),
+                               np.asarray(cs0.weights))):
+        raise AssertionError("verified wire under corruption drifted from "
+                             "the clean build's draw")
+    retry_bill = led.by_prefix("retry/")
+    if led.total != led0.total + retry_bill:
+        raise AssertionError(
+            f"corrupted-wire bill {led.total} != clean {led0.total} "
+            f"+ retries {retry_bill}")
+    if cs.comm_units != cs0.comm_units + tr.stats.units_retried:
+        raise AssertionError(
+            f"coreset comm_units {cs.comm_units} != clean {cs0.comm_units} "
+            f"+ retransmitted {tr.stats.units_retried}")
+    entries.append({
+        "kind": "detect-e2e", "n": ds.n, "m": 256,
+        "corrupts": tr.stats.silent_corrupts,
+        "detected": tr.stats.silent_detected,
+        "draw_identical": True, "bill": led.total,
+        "clean_bill": led0.total, "retry_units": retry_bill,
+    })
+    return entries, rows
+
+
+# --------------------------------------------------------------------------
+# Experiment 2: poisoned party — undefended skew vs quarantine recovery
+# --------------------------------------------------------------------------
+
+def run_quarantine(fast: bool):
+    n, m, d, T = POISON_N, 512, 30, 3
+    seeds = 2 if fast else 4
+    _, ds = _vrlr_stream(3, n, d, T)
+    lam = 0.1 * n
+    baseline = fit_ridge(ds, full_data_coreset(ds), lam).params
+
+    def rel(cs):
+        rep = evaluate(ds, fit_ridge(ds, cs, lam), baseline=baseline)
+        r = rep.rel_error
+        return float("inf") if not np.isfinite(r) else max(r, 0.0)
+
+    def poisoned(seed):
+        # party 0 sign-flips every upload; the receiver never checksums,
+        # so the damage reaches the accumulation seam
+        return Transport(FaultPlan(seed=7 + seed, silent_corrupt={0: 1.0},
+                                   silent_kind="sign"), verify=False)
+
+    def spec(policy):
+        return CoresetSpec(task="vrlr", budgets=m, engine="pipelined",
+                           backend="ref", block_size=512,
+                           fault_policy=policy)
+
+    r_clean, r_undef, r_quar, wall = [], [], [], 0.0
+    for s in range(seeds):
+        key = jax.random.PRNGKey(100 + s)
+        r_clean.append(rel(CoresetPipeline(ds).build(spec("retry"), key=key)))
+        try:
+            cs_u = CoresetPipeline(ds).build(spec("retry"), key=key,
+                                             transport=poisoned(s))
+            r_undef.append(rel(cs_u))
+        except Exception:
+            # a crash is the attack succeeding by another route
+            r_undef.append(float("inf"))
+        t0 = time.time()
+        cs_q = CoresetPipeline(ds).build(spec("quarantine"), key=key,
+                                         transport=poisoned(s))
+        wall += time.time() - t0
+        if cs_q.degraded is None or cs_q.degraded.surviving != (1, 2):
+            raise AssertionError(
+                f"expected party 0 quarantined, got receipt {cs_q.degraded}")
+        if "quarantined for integrity violations" not in cs_q.degraded.reason:
+            raise AssertionError(
+                f"receipt lacks the integrity reason: {cs_q.degraded.reason!r}")
+        r_quar.append(rel(cs_q))
+
+    mean_clean = float(np.mean(r_clean))
+    mean_undef = float(np.mean(r_undef))
+    mean_quar = float(np.mean(r_quar))
+    gate = max(QUALITY_GATE * mean_clean, REL_FLOOR)
+    if not mean_undef > gate:
+        raise AssertionError(
+            f"undefended rel_error {mean_undef:.4f} under a poisoned party "
+            f"stays within {gate:.4f} — the attack scenario is toothless")
+    if not mean_quar <= gate:
+        raise AssertionError(
+            f"quarantined rel_error {mean_quar:.4f} exceeds "
+            f"max({QUALITY_GATE}x clean {mean_clean:.4f}, {REL_FLOOR}) "
+            f"(n={n}, m={m}, {seeds} seeds)")
+    entry = {
+        "kind": "quarantine", "n": n, "m": m, "seeds": seeds,
+        "rel_clean": round(mean_clean, 6),
+        "rel_undefended": (None if not np.isfinite(mean_undef)
+                           else round(mean_undef, 6)),
+        "rel_quarantined": round(mean_quar, 6),
+        "undefended_ratio": (None if not np.isfinite(mean_undef)
+                             else round(mean_undef / max(mean_clean, 1e-12), 2)),
+        "quarantined_ratio": round(mean_quar / max(mean_clean, 1e-12), 3),
+    }
+    row = {"bench": BENCH, "method": "quarantine-poisoned-party", "size": n,
+           "cost_mean": round(mean_quar, 6),
+           "cost_std": round(float(np.std(r_quar)), 6),
+           "comm": 0, "wall_s": round(wall / seeds, 3)}
+    return [entry], [row]
+
+
+# --------------------------------------------------------------------------
+# Experiment 3: checksum overhead on the warm pipelined path
+# --------------------------------------------------------------------------
+
+def run_overhead(fast: bool):
+    n = 16_384 if fast else 65_536
+    m, d, T = 256, 12, 3
+    _, ds = _vrlr_stream(9, n, d, T)
+    key = jax.random.PRNGKey(5)
+    spec = CoresetSpec(task="vrlr", budgets=m, engine="pipelined",
+                       backend="ref", block_size=512)
+
+    def build(transport):
+        return CoresetPipeline(ds).build(spec, key=key, transport=transport)
+
+    # warm both paths (jit + any lazy setup), pin draw identity
+    cs0 = build(None)
+    cs1 = build(Transport(FaultPlan.none()))
+    if not (np.array_equal(np.asarray(cs0.indices), np.asarray(cs1.indices))
+            and np.array_equal(np.asarray(cs0.weights),
+                               np.asarray(cs1.weights))):
+        raise AssertionError("null verifying transport drifted from the "
+                             "transportless build's draw")
+
+    t_bare, t_wire = [], []
+    for _ in range(OVERHEAD_REPS):          # interleave to cancel drift
+        t0 = time.time()
+        build(None)
+        t_bare.append(time.time() - t0)
+        t0 = time.time()
+        build(Transport(FaultPlan.none()))
+        t_wire.append(time.time() - t0)
+    med_bare = float(np.median(t_bare))
+    med_wire = float(np.median(t_wire))
+    overhead = med_wire / med_bare - 1.0
+    if not overhead <= OVERHEAD_GATE:
+        raise AssertionError(
+            f"checksummed wire costs {overhead:+.1%} on the warm pipelined "
+            f"path (bare {med_bare:.3f}s, wire {med_wire:.3f}s), "
+            f"gate is {OVERHEAD_GATE:.0%}")
+    entry = {
+        "kind": "overhead", "n": n, "m": m, "reps": OVERHEAD_REPS,
+        "rows_per_s_bare": round(n / med_bare, 1),
+        "rows_per_s_wire": round(n / med_wire, 1),
+        "overhead_frac": round(overhead, 4), "draw_identical": True,
+    }
+    row = {"bench": BENCH, "method": "checksum-overhead", "size": n,
+           "cost_mean": round(max(overhead, 0.0), 4), "cost_std": 0.0,
+           "comm": 0, "wall_s": round(med_wire, 3)}
+    return [entry], [row]
+
+
+def run(fast: bool = True):
+    entries, rows = [], []
+    for fn in (run_detect, run_quarantine, run_overhead):
+        e, r = fn(fast)
+        entries.extend(e)
+        rows.extend(r)
+    write_rows(BENCH, rows)
+    write_bench_json(SECTION, entries)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true", default=True)
+    ap.add_argument("--full", dest="fast", action="store_false")
+    args = ap.parse_args()
+    for r in run(fast=args.fast):
+        print(r)

@@ -43,6 +43,7 @@ MODULES = [
     "selector_step",    # beyond-paper: LLM coreset batch selection
     "assumption_sweep",  # beyond-paper: Assumption 4.1/5.1 violation sweep
     "chaos",            # fault injection: retry billing + degrade + resume
+    "integrity",        # silent corruption: detection + quarantine + overhead
 ]
 
 

@@ -15,7 +15,12 @@ Public API:
   CommLedger, CommSchedule, theoretical_dis_cost          (comm)
   FaultPlan, Transport, PartyUnavailable, DegradedBuild,
   DroppedParty, TransportStats, StreamCheckpoint,
-  deliver_or_record, FAULT_POLICIES                       (faults — party fault model)
+  deliver_or_record, FAULT_POLICIES,
+  SILENT_KINDS, perturb_payload                           (faults — party fault model)
+  IntegrityError, WireEnvelope, Finding, HealthReport,
+  payload_digest, check_mass_table, check_weights,
+  check_merge_children, health_from_masses,
+  require_valid_masses                                    (integrity — verified wire)
   dis_plan, dis_plan_full, dis_plan_blocked, server_plan, uniform_plan,
   dis_sample, uniform_sample, dis_marginals,
   dis_blocked_marginals, blocked_geometry                 (dis — Algorithm 1)
@@ -74,6 +79,7 @@ from repro.core.solve import (
 from repro.core.comm import CommLedger, CommSchedule, theoretical_dis_cost
 from repro.core.faults import (
     FAULT_POLICIES,
+    SILENT_KINDS,
     DegradedBuild,
     DroppedParty,
     FaultPlan,
@@ -82,6 +88,20 @@ from repro.core.faults import (
     Transport,
     TransportStats,
     deliver_or_record,
+    perturb_payload,
+)
+from repro.core.integrity import (
+    GRAM_COND_WARN,
+    Finding,
+    HealthReport,
+    IntegrityError,
+    WireEnvelope,
+    check_mass_table,
+    check_merge_children,
+    check_weights,
+    health_from_masses,
+    payload_digest,
+    require_valid_masses,
 )
 from repro.core.coreset import (
     Coreset,
@@ -98,6 +118,7 @@ from repro.core.dis import (
     dis_plan_full,
     dis_sample,
     server_plan,
+    split_uploads,
     uniform_plan,
     uniform_sample,
 )

@@ -45,12 +45,20 @@ import numpy as np
 
 from repro.core.comm import CommLedger, CommSchedule
 from repro.core.coreset import Coreset
-from repro.core.dis import _float_dtype, dis_plan_full, uniform_plan
+from repro.core.dis import _float_dtype, dis_plan_full, split_uploads, uniform_plan
 from repro.core.faults import (
     DegradedBuild,
+    DroppedParty,
     PartyUnavailable,
     StreamCheckpoint,
     Transport,
+)
+from repro.core.integrity import (
+    HealthReport,
+    IntegrityError,
+    check_weights,
+    health_from_masses,
+    require_valid_masses,
 )
 from repro.core.plan import (
     DEFAULT_CHUNK_BLOCKS,
@@ -63,6 +71,8 @@ from repro.core.plan import (
 )
 from repro.core.sensitivity import (
     norm_scores,
+    total_sensitivity_bound_vkmc,
+    total_sensitivity_bound_vrlr,
     vkmc_local_scores,
     vrlr_scores_stacked,
 )
@@ -263,6 +273,143 @@ def _faulted_round1(
     return ds.select_parties(alive), alive, degraded, rep.units
 
 
+def _validators_on(fault_policy: str) -> bool:
+    """The policy matrix's defense column: ``fail`` and ``quarantine`` run
+    the value-level validators on delivered payloads; ``retry``/``degrade``
+    trust party values (they defend availability, not honesty — the
+    undefended baseline the integrity benchmark measures against)."""
+    return fault_policy in ("fail", "quarantine")
+
+
+def _task_bound(spec: CoresetTask, eff_ds: VFLDataset, backend: str,
+                params: dict) -> Optional[float]:
+    """The task's total-sensitivity bound for the value-level validators —
+    Thm 4.2 for VRLR (sum of effective widths + T, labels widening party
+    T's block), Lemma F.2 for VKMC (2(k+1)*alpha*T exactly).  The ``norm``
+    ablation backend scores row norms, which respect no such bound."""
+    if backend == "norm":
+        return None
+    if spec.name == "vrlr":
+        dims = list(eff_ds.dims)
+        if eff_ds.y is not None:
+            dims[-1] += 1
+        return total_sensitivity_bound_vrlr(dims, eff_ds.T)
+    if spec.name == "vkmc":
+        return total_sensitivity_bound_vkmc(
+            int(params.get("k", 10)), eff_ds.T,
+            float(params.get("alpha", 2.0)))
+    return None
+
+
+def _integrity_round1(
+    spec: CoresetTask, eff_ds: VFLDataset, transport: Transport,
+    ledger: Optional[CommLedger], fault_policy: str, masses,
+    backend: str, params: dict,
+):
+    """The round-1 integrity seam: ship each party's mass row under a
+    checksummed :class:`~repro.core.integrity.WireEnvelope`, then run the
+    value-level validators on what was DELIVERED.
+
+    ``masses`` is the host (T_eff, cells) table — per-row scores for the
+    materialized engine, the (T, nb) block table for the streamed ones.
+    The cross-check totals are the honest per-party scalars (the round-1
+    ``G_j`` message the schedule already billed); a lying or corrupted row
+    cannot match them.  Returns ``(delivered_table_or_None, offenders)``:
+    the table is None when nothing changed (the clean path touches no
+    bytes), ``offenders`` — local party indices — is nonempty only
+    under ``quarantine`` (validator hits under ``fail`` raise a
+    party-attributed :exc:`IntegrityError`; transport-level detections
+    were already retried and billed inside ``ship``), and
+    ``retry_units`` is the retransmission traffic ship billed, so the
+    returned coreset's ``comm_units`` stays the composed ledger truth."""
+    tbl = np.asarray(masses)
+    totals = tbl.sum(axis=1)
+    rows = {j: tbl[j] for j in range(tbl.shape[0])}
+    r0 = transport.stats.units_retried
+    delivered, failed = transport.ship(
+        "dis/round1/G_j", rows, ledger, units=1,
+        max_retries=_policy_retries(fault_policy),
+        drop_on_exhaust=(fault_policy == "quarantine"))
+    retry_units = transport.stats.units_retried - r0
+    changed = any(delivered.get(j) is not rows[j] for j in rows)
+    out = (np.stack([np.asarray(delivered.get(j, rows[j]))
+                     for j in range(len(rows))])
+           if changed else None)
+    offenders = set(failed)
+    if _validators_on(fault_policy):
+        offenders |= set(require_valid_masses(
+            tbl if out is None else out, totals,
+            bound=_task_bound(spec, eff_ds, backend, params),
+            policy=fault_policy))
+    return out, tuple(sorted(offenders)), retry_units
+
+
+def _quarantine(
+    spec: CoresetTask, ds: VFLDataset, alive: Optional[list],
+    degraded: Optional[DegradedBuild], offenders: Tuple[int, ...],
+    tag: str = "dis/round1/G_j",
+) -> Tuple[VFLDataset, list, DegradedBuild]:
+    """Fold integrity offenders into the degrade machinery: map local
+    offender indices back to original party ids, drop them, and extend the
+    :class:`DegradedBuild` receipt with the quarantine reason.  The label
+    party is irreplaceable and losing every party is unrecoverable — both
+    raise instead of degrading, mirroring :func:`_faulted_round1`."""
+    orig = list(alive) if alive is not None else list(range(ds.T))
+    bad = sorted(orig[j] for j in offenders)
+    survivors = [p for p in orig if p not in set(bad)]
+    if not survivors:
+        raise IntegrityError(bad[0], "every party quarantined; no feature "
+                                     "slices left to build from", tag=tag)
+    if spec.needs_labels and (ds.T - 1) in bad:
+        raise IntegrityError(
+            ds.T - 1, "label party failed integrity validation; labels "
+                      "live only at party T-1, the build cannot continue",
+            tag=tag)
+    dropped = tuple(degraded.dropped if degraded is not None else ()) + tuple(
+        DroppedParty(p, f"quarantine/{tag}", 1) for p in bad)
+    reason = (f"part{'y' if len(bad) == 1 else 'ies'} {bad} quarantined "
+              f"for integrity violations at {tag!r}")
+    receipt = DegradedBuild(
+        dropped=tuple(sorted(dropped, key=lambda d: d.party)),
+        surviving=tuple(survivors), total_parties=ds.T, reason=reason)
+    return ds.select_parties(survivors), survivors, receipt
+
+
+def _ship_round2(
+    transport: Transport, ledger: Optional[CommLedger], fault_policy: str,
+    plan, alive: Optional[list], T: int,
+):
+    """Ship the round-2 index uploads under envelopes.  Units per party are
+    the realized a_j — the exact sizes ``CommSchedule.dis_rounds23`` billed,
+    so envelope-detected retransmissions land under ``retry/dis/round2/S_up``
+    at the message's true cost.  Returns the (possibly corrupted, if the
+    transport does not verify) realized index vector plus the retry units
+    billed, and raises through the weight validator when the policy
+    defends."""
+    counts = np.asarray(plan.counts)
+    ups = split_uploads(np.asarray(plan.indices), counts)
+    orig = list(alive) if alive is not None else list(range(T))
+    payloads = {orig[j]: ups[j] for j in range(len(ups)) if counts[j] > 0}
+    units = {orig[j]: int(counts[j]) for j in range(len(ups)) if counts[j] > 0}
+    r0 = transport.stats.units_retried
+    delivered, _ = transport.ship(
+        "dis/round2/S_up", payloads, ledger, units=units,
+        max_retries=_policy_retries(fault_policy), drop_on_exhaust=False)
+    retry_units = transport.stats.units_retried - r0
+    if _validators_on(fault_policy):
+        why = check_weights(plan.weights)
+        if why is not None:
+            raise IntegrityError(None, f"realized coreset weights: {why}",
+                                 tag="dis/round3/g_scores")
+    changed = any(delivered[p] is not payloads[p] for p in payloads)
+    if not changed:
+        return plan.indices, retry_units
+    parts = [np.asarray(delivered.get(orig[j], ups[j]))
+             for j in range(len(ups))]
+    out = jnp.asarray(np.concatenate(parts)) if parts else plan.indices
+    return out, retry_units
+
+
 def _exec_materialized(
     spec: CoresetTask, ds: VFLDataset, m: int, key, backend: str,
     ledger: Optional[CommLedger], params: dict,
@@ -303,11 +450,29 @@ def _exec_materialized(
             raise ValueError("DIS requires a positive total score")
         schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
         schedule.record(ledger)
-        return Coreset(plan.indices, plan.weights, schedule.total)
+        return Coreset(plan.indices, plan.weights, schedule.total,
+                       health=health_from_masses(np.asarray(scores)))
 
     eff_ds, alive, degraded, units1 = _faulted_round1(
         spec, ds, transport, ledger, fault_policy)
     scores, dis_key = spec.score_fn(key, eff_ds, backend=backend, **params)
+    # integrity seam: the per-row score table IS this engine's round-1 mass
+    # payload — ship it under envelopes, validate what arrived
+    delivered, offenders, ship_units = _integrity_round1(
+        spec, eff_ds, transport, ledger, fault_policy,
+        np.asarray(scores), backend, params)
+    if offenders:
+        eff_ds, alive, degraded = _quarantine(spec, ds, alive, degraded,
+                                              offenders)
+        # rescore the survivors; their tables already validated clean
+        scores, dis_key = spec.score_fn(key, eff_ds, backend=backend,
+                                        **params)
+    elif delivered is not None:
+        # an unverifying transport delivered corrupted masses — they drive
+        # the draw, which is exactly the undefended blow-up the integrity
+        # benchmark measures
+        scores = jnp.asarray(delivered)
+    health = health_from_masses(np.asarray(scores))
     plan = dis_plan_full(dis_key, scores, m)
     if not bool(plan.totals.sum() > 0):
         raise ValueError("DIS requires a positive total score")
@@ -318,8 +483,11 @@ def _exec_materialized(
                                   parties=alive),
         ledger, max_retries=retries, drop_on_exhaust=False,
     )
-    return Coreset(plan.indices, plan.weights, units1 + rep23.units,
-                   degraded=degraded)
+    indices, r2_units = _ship_round2(transport, ledger, fault_policy, plan,
+                                     alive, ds.T)
+    return Coreset(indices, plan.weights,
+                   units1 + rep23.units + ship_units + r2_units,
+                   degraded=degraded, health=health)
 
 
 # (task spec, dims, labeled?, n, m, backend, params) -> jitted builder.
@@ -462,23 +630,45 @@ def _exec_streaming(
         eff_ds, alive, degraded, units1 = _faulted_round1(
             spec, ds, transport, ledger, fault_policy)
 
-    masses = None
-    if sharded_masses:
-        # task/backend compatibility was validated by compile_plan — every
-        # path into this executor goes through the planner
-        masses = _sharded_mass_table(spec.name, key, eff_ds, block_size,
-                                     backend, params)
-    if checkpoint is not None:
-        checkpoint.bind((
-            spec.name, eff_ds.n, eff_ds.dims, eff_ds.y is not None,
-            int(block_size), int(chunk_blocks), bool(prefetch), backend,
-            tuple(sorted(params.items())), int(m),
-            tuple(np.asarray(_key_data(key)).ravel().tolist()),
-        ))
-    scorer = make_stream_scorer(spec.name, key, eff_ds, int(block_size),
-                                backend, probe=probe,
-                                chunk_blocks=chunk_blocks, prefetch=prefetch,
-                                masses=masses, ckpt=checkpoint, **params)
+    def _build_scorer(eff):
+        masses = None
+        if sharded_masses:
+            # task/backend compatibility was validated by compile_plan —
+            # every path into this executor goes through the planner
+            masses = _sharded_mass_table(spec.name, key, eff, block_size,
+                                         backend, params)
+        if checkpoint is not None:
+            checkpoint.bind((
+                spec.name, eff.n, eff.dims, eff.y is not None,
+                int(block_size), int(chunk_blocks), bool(prefetch), backend,
+                tuple(sorted(params.items())), int(m),
+                tuple(np.asarray(_key_data(key)).ravel().tolist()),
+            ))
+        return make_stream_scorer(spec.name, key, eff, int(block_size),
+                                  backend, probe=probe,
+                                  chunk_blocks=chunk_blocks,
+                                  prefetch=prefetch, masses=masses,
+                                  ckpt=checkpoint, **params)
+
+    scorer = _build_scorer(eff_ds)
+    ship_units = 0
+    if transport is not None:
+        # integrity seam: the (T, nb) block-mass table is the streamed
+        # round-1 payload — ship it under envelopes, validate what arrived
+        delivered, offenders, ship_units = _integrity_round1(
+            spec, eff_ds, transport, ledger, fault_policy,
+            np.asarray(scorer.masses), backend, params)
+        if offenders:
+            eff_ds, alive, degraded = _quarantine(spec, ds, alive, degraded,
+                                                  offenders)
+            scorer = _build_scorer(eff_ds)  # rescore the survivors
+        elif delivered is not None:
+            # unverifying transport: the corrupted table drives the draw
+            scorer = dataclasses.replace(
+                scorer, masses=jnp.asarray(
+                    delivered.astype(np.asarray(scorer.masses).dtype)))
+    health = health_from_masses(np.asarray(scorer.masses),
+                                gram_conds=scorer.gram_conds)
     if not bool(scorer.masses.sum() > 0):
         raise ValueError("DIS requires a positive total score")
     if pipelined:
@@ -490,14 +680,18 @@ def _exec_streaming(
     if transport is None:
         schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
         schedule.record(ledger)
-        return Coreset(plan.indices, plan.weights, schedule.total)
+        return Coreset(plan.indices, plan.weights, schedule.total,
+                       health=health)
     rep23 = transport.deliver(
         CommSchedule.dis_rounds23(ds.T, m, counts=np.asarray(plan.counts),
                                   parties=alive),
         ledger, max_retries=retries, drop_on_exhaust=False,
     )
-    return Coreset(plan.indices, plan.weights, units1 + rep23.units,
-                   degraded=degraded)
+    indices, r2_units = _ship_round2(transport, ledger, fault_policy, plan,
+                                     alive, ds.T)
+    return Coreset(indices, plan.weights,
+                   units1 + rep23.units + ship_units + r2_units,
+                   degraded=degraded, health=health)
 
 
 # --------------------------------------------------------------------------

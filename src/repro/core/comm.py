@@ -87,6 +87,16 @@ class CommLedger:
         for m in self.messages:
             self._by_tag[m.tag] += m.units
 
+    def since(self, mark: int) -> int:
+        """Units recorded after a :meth:`mark` — the cost delta of the
+        bracketed operation (e.g. the integrity benchmark reads one build's
+        retransmission overhead off this without forking ledgers)."""
+        if not 0 <= mark <= len(self.messages):
+            raise ValueError(
+                f"bad mark {mark}: ledger has {len(self.messages)} messages"
+            )
+        return sum(m.units for m in self.messages[mark:])
+
     def merge(self, other: "CommLedger") -> None:
         for m in other.messages:
             self.send(m.tag, m.src, m.dst, m.units)

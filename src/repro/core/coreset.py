@@ -20,6 +20,7 @@ from repro.core.vfl import VFLDataset
 
 if TYPE_CHECKING:
     from repro.core.faults import DegradedBuild
+    from repro.core.integrity import HealthReport
 
 
 @dataclasses.dataclass
@@ -31,14 +32,19 @@ class Coreset:
 
     ``degraded`` (default None: a full-federation build) is the
     :class:`~repro.core.faults.DegradedBuild` receipt when the construction
-    continued without every party under ``fault_policy="degrade"`` — it
-    names the dropped parties/rounds and the widened sensitivity bound.
+    continued without every party under ``fault_policy="degrade"`` or
+    ``"quarantine"`` — it names the dropped parties/rounds and the widened
+    sensitivity bound.  ``health`` (default None: engines that never leave
+    the traced path, e.g. jit/batched) is the
+    :class:`~repro.core.integrity.HealthReport` of the scoring state the
+    draw actually used.
     """
 
     indices: jax.Array   # (m,) int
     weights: jax.Array   # (m,) float
     comm_units: int      # construction cost in paper units
     degraded: Optional["DegradedBuild"] = None
+    health: Optional["HealthReport"] = None
 
     @property
     def m(self) -> int:

@@ -214,6 +214,25 @@ def dis_plan_full(
     return DisPlan(S, w, a, G_j)
 
 
+def split_uploads(indices, counts):
+    """Recover the round-2 per-party uploads from a realized plan.
+
+    The realized sample ``S`` is party-major (round 2 concatenates party
+    j's a_j draws in party order — in :func:`dis_plan_full` the stable
+    argsort keeps taken slots in row-major (party, slot) order), so party
+    j's upload is the j-th contiguous slice of length ``counts[j]``.  These
+    are exactly the payloads the integrity envelopes seal on the
+    ``dis/round2/S_up`` message.  Host-side numpy; returns a list of
+    (a_j,) arrays whose concatenation is ``indices``."""
+    idx = np.asarray(indices)
+    c = np.asarray(counts, dtype=np.int64)
+    if int(c.sum()) != idx.shape[0]:
+        raise ValueError(
+            f"counts sum to {int(c.sum())} but the plan realized "
+            f"{idx.shape[0]} indices; uploads cannot be attributed")
+    return np.split(idx, np.cumsum(c)[:-1])
+
+
 def blocked_geometry(n: int, block_size: int) -> Tuple[int, int]:
     """(num_blocks nb, rows-per-block bs) for a ``block_size`` row chunking —
     delegates to the canonical :func:`repro.core.vfl.block_geometry`, so the

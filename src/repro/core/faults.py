@@ -54,8 +54,13 @@ from typing import Any, Dict, Mapping, Optional, Tuple, Union
 import numpy as np
 
 from repro.core.comm import CommLedger, CommSchedule
+from repro.core.integrity import WireEnvelope
 
-FAULT_POLICIES = ("fail", "retry", "degrade")
+FAULT_POLICIES = ("fail", "retry", "degrade", "quarantine")
+
+#: Silent-corruption flavors: whole-payload sign flip, whole-payload scale
+#: inflation, and a single seeded NaN injection.
+SILENT_KINDS = ("sign", "scale", "nan")
 
 _Rate = Union[float, Mapping[int, float], Tuple[Tuple[int, float], ...]]
 
@@ -97,6 +102,7 @@ class DegradedBuild:
     dropped: Tuple[DroppedParty, ...]
     surviving: Tuple[int, ...]
     total_parties: int
+    reason: str = ""
 
     @property
     def bound_factor(self) -> float:
@@ -107,11 +113,12 @@ class DegradedBuild:
             f"party {d.party} at {d.tag} ({d.attempts} attempts)"
             for d in self.dropped
         )
-        return (
+        base = (
             f"DegradedBuild: {len(self.surviving)}/{self.total_parties} "
             f"parties survived (dropped: {drops}); sensitivity bound "
             f"widened x{self.bound_factor:.2f}"
         )
+        return f"{base}; {self.reason}" if self.reason else base
 
 
 @functools.lru_cache(maxsize=4096)
@@ -160,6 +167,39 @@ def _normalize_rate(rate: _Rate, what: str) -> Tuple[float, Tuple[Tuple[int, flo
     return default, overrides
 
 
+def perturb_payload(payload: Any, kind: str, u: float) -> np.ndarray:
+    """Apply one silent corruption to a payload copy (the original is never
+    touched — the honest sender can retransmit it).
+
+    ``sign`` negates every entry; ``scale`` inflates every entry by a
+    seeded factor in [10, 1000]; ``nan`` plants a single NaN at the seeded
+    position ``int(u * size)``.  Integer payloads (round-2 index uploads)
+    cannot hold NaN, so ``nan`` degrades to ``sign`` and ``scale`` uses an
+    integer factor.  Every kind changes the payload bytes for any nonzero
+    payload, so the envelope digest catches all of them."""
+    arr = np.asarray(payload)
+    out = arr.copy()
+    flat = out.reshape(-1)
+    if flat.size == 0:
+        return out
+    is_float = np.issubdtype(arr.dtype, np.floating)
+    if kind == "nan" and not is_float:
+        kind = "sign"
+    if kind == "sign":
+        np.negative(flat, out=flat)
+    elif kind == "scale":
+        if is_float:
+            flat *= np.asarray(10.0 ** (1.0 + 2.0 * u), arr.dtype)
+        else:
+            flat *= 2 + int(u * 8)
+    elif kind == "nan":
+        flat[min(int(u * flat.size), flat.size - 1)] = np.nan
+    else:
+        raise ValueError(f"unknown corruption kind {kind!r}; "
+                         f"expected one of {SILENT_KINDS}")
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultPlan:
     """Deterministic, seeded per-party fault specification.
@@ -172,6 +212,18 @@ class FaultPlan:
     Corrupt messages are assumed checksum-detected at the receiver, so they
     cost a retransmission like a drop (billed under the same ``retry/``
     tag, counted separately in :class:`TransportStats`).
+
+    ``silent_corrupt`` is the adversarial rate: a silently corrupted
+    transmission actually PERTURBS the payload (seeded sign-flip / scale /
+    NaN injection via :func:`perturb_payload`) instead of being
+    pre-detected.  Whether it is caught depends on the receiver: a
+    verifying :class:`Transport` checks the :class:`WireEnvelope` digest
+    and retransmits (billed like any retry); an unverifying one delivers
+    the damaged bytes — the scenario the value-level validators exist to
+    catch.  ``silent_kind`` pins the corruption flavor (one of
+    :data:`SILENT_KINDS`); by default the fate draw picks one.  Silent
+    fates live in their own ``silent!<tag>`` namespace of the threefry
+    chain, so enabling them never perturbs drop/corrupt/delay replay.
 
     ``max_retries`` bounds retransmissions per message; backoff between
     attempts is capped exponential: ``min(backoff_cap_s, backoff_base_s *
@@ -187,14 +239,22 @@ class FaultPlan:
     max_retries: int = 3
     backoff_base_s: float = 0.01
     backoff_cap_s: float = 0.16
+    silent_corrupt: _Rate = 0.0
+    silent_kind: Optional[str] = None
 
     def __post_init__(self) -> None:
         d, do = _normalize_rate(self.drop, "drop")
         c, co = _normalize_rate(self.corrupt, "corrupt")
         l, lo = _normalize_rate(self.delay, "delay")
+        s, so = _normalize_rate(self.silent_corrupt, "silent_corrupt")
         object.__setattr__(self, "drop", do if do else d)
         object.__setattr__(self, "corrupt", co if co else c)
         object.__setattr__(self, "delay", lo if lo else l)
+        object.__setattr__(self, "silent_corrupt", so if so else s)
+        if self.silent_kind is not None and self.silent_kind not in SILENT_KINDS:
+            raise ValueError(
+                f"silent_kind must be one of {SILENT_KINDS} or None, "
+                f"got {self.silent_kind!r}")
         if not isinstance(self.seed, int) or isinstance(self.seed, bool):
             raise ValueError(f"seed must be an int, got {self.seed!r}")
         if not isinstance(self.max_retries, int) or self.max_retries < 0:
@@ -227,7 +287,28 @@ class FaultPlan:
             if isinstance(r, tuple):
                 return any(p > 0 for _, p in r)
             return r > 0
-        return not (_any(self.drop) or _any(self.corrupt) or _any(self.delay))
+        return not (_any(self.drop) or _any(self.corrupt) or _any(self.delay)
+                    or _any(self.silent_corrupt))
+
+    def silent_fate(self, tag: str, party: int, attempt: int
+                    ) -> Optional[Tuple[str, float]]:
+        """None, or ``(kind, u)`` for a silently corrupted transmission.
+
+        Drawn from a SEPARATE fate namespace (``silent!<tag>``) so enabling
+        silent corruption never shifts the drop/corrupt/delay chain (the
+        chaos replay pins), and a zero rate consumes no draws at all."""
+        p = self.rate("silent_corrupt", party)
+        if p == 0.0:
+            return None
+        u_hit, u_kind, u_mag = _fault_draw(self.seed, "silent!" + tag,
+                                           party, attempt)
+        if u_hit >= p:
+            return None
+        kind = self.silent_kind
+        if kind is None:
+            kind = SILENT_KINDS[min(int(u_kind * len(SILENT_KINDS)),
+                                    len(SILENT_KINDS) - 1)]
+        return kind, float(u_mag)
 
     def decide(self, tag: str, party: int, attempt: int) -> "FaultEvent":
         """The fate of delivery attempt ``attempt`` of message ``tag`` to/from
@@ -285,6 +366,8 @@ class TransportStats:
     units_base: int = 0
     units_retried: int = 0
     sim_time_s: float = 0.0
+    silent_corrupts: int = 0
+    silent_detected: int = 0
 
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -329,9 +412,13 @@ class Transport:
     same object it injected.
     """
 
-    def __init__(self, plan: Optional[FaultPlan] = None) -> None:
+    def __init__(self, plan: Optional[FaultPlan] = None, *,
+                 verify: bool = True) -> None:
         self.plan = plan if plan is not None else FaultPlan.none()
         self.stats = TransportStats()
+        # verify=False models an undefended receiver: silently corrupted
+        # payloads shipped through this transport are DELIVERED as-is
+        self.verify = bool(verify)
 
     def deliver(
         self,
@@ -401,6 +488,83 @@ class Transport:
             retries=retries, failed=failed,
             sim_time_s=stats.sim_time_s - sim0,
         )
+
+    def ship(
+        self,
+        tag: str,
+        payloads: Mapping[int, Any],
+        ledger: Optional[CommLedger] = None,
+        *,
+        units: Union[int, Mapping[int, int], None] = None,
+        down: bool = False,
+        max_retries: Optional[int] = None,
+        drop_on_exhaust: bool = False,
+    ) -> Tuple[Dict[int, Any], Dict[int, DroppedParty]]:
+        """Deliver VALUE payloads under checksummed :class:`WireEnvelope`\\ s.
+
+        The schedule already billed the base message — ``ship`` never bills
+        base tags.  What it adds is the integrity seam: each party's payload
+        is sealed, silently corrupted per the plan's ``silent_corrupt`` fate
+        chain, and — when the transport verifies — every detected mismatch
+        is retransmitted and billed under ``retry/<tag>`` with the message's
+        full units, the exact :meth:`deliver` convention.  With verification
+        off the corrupted payload is DELIVERED, the attack the value-level
+        validators exist to catch.
+
+        ``units`` is the per-party message size (scalar for all, or a
+        mapping; default 1 — the round-1 scalar convention).  Returns
+        ``(delivered, failed)``: ``delivered`` maps party -> payload, and is
+        the ORIGINAL object whenever no corruption fired (so the clean path
+        stays bit-identical and free of host/device round-trips); ``failed``
+        maps party -> :class:`DroppedParty` for parties whose every
+        transmission was corrupted (only with ``drop_on_exhaust=True``;
+        otherwise :exc:`PartyUnavailable` raises)."""
+        plan = self.plan
+        retries_cap = (plan.max_retries if max_retries is None
+                       else int(max_retries))
+        stats = self.stats
+        delivered: Dict[int, Any] = {}
+        failed: Dict[int, DroppedParty] = {}
+
+        def _units(j: int) -> int:
+            if units is None:
+                return 1
+            if isinstance(units, Mapping):
+                return int(units.get(j, 1))
+            return int(units)
+
+        for j, payload in payloads.items():
+            env = WireEnvelope.seal(tag, j, payload)
+            attempts = 0
+            while True:
+                fate = plan.silent_fate(tag, j, attempts)
+                attempts += 1
+                wire = (payload if fate is None
+                        else perturb_payload(payload, *fate))
+                if fate is not None:
+                    stats.silent_corrupts += 1
+                if not self.verify or env.verify(wire):
+                    delivered[j] = wire
+                    break
+                stats.silent_detected += 1
+                # detected corruption: the bytes still crossed the link
+                u = _units(j)
+                if ledger is not None:
+                    rtag = f"retry/{tag}"
+                    if down:
+                        ledger.server_to_party(rtag, j, u)
+                    else:
+                        ledger.party_to_server(rtag, j, u)
+                stats.units_retried += u
+                if attempts > retries_cap:
+                    stats.exhausted += 1
+                    if drop_on_exhaust:
+                        failed[j] = DroppedParty(j, tag, attempts)
+                        break
+                    raise PartyUnavailable(j, tag, attempts)
+                stats.retries += 1
+                stats.sim_time_s += plan.backoff_s(attempts)
+        return delivered, failed
 
 
 def deliver_or_record(

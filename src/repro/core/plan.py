@@ -52,7 +52,7 @@ SCORE_BACKENDS = ("pallas", "ref", "norm")
 
 ENGINES = ("materialized", "batched", "streamed", "pipelined")
 
-FAULT_POLICIES = ("fail", "retry", "degrade")
+FAULT_POLICIES = ("fail", "retry", "degrade", "quarantine")
 
 # superchunk width when chunk_blocks is not given: deep enough to amortise
 # the per-dispatch overhead, shallow enough that two prefetch slots + one
@@ -104,7 +104,7 @@ class CoresetSpec:
     memory_budget_bytes: Optional[int] = None
     sharded_masses: bool = False          # mass table via shard_map over `data`
     m_cap: Optional[int] = None           # batched draw capacity override
-    fault_policy: str = "fail"            # fail | retry | degrade (faults.py)
+    fault_policy: str = "fail"            # fail | retry | degrade | quarantine
     params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self) -> None:
@@ -328,6 +328,13 @@ class ExecutionPlan:
                 f"  streaming knobs: chunk_blocks={self.chunk_blocks} "
                 f"prefetch={'on' if self.prefetch else 'off'}"
             )
+        validators = ("on" if spec.fault_policy in ("fail", "quarantine")
+                      else "off")
+        lines.append(
+            f"  integrity: wire envelopes on transported rounds 1-2; "
+            f"value validators {validators} "
+            f"(policy={spec.fault_policy})"
+        )
         mm = ", ".join(f"{e}={_fmt_bytes(self.memory_model[e])}"
                        for e in ENGINES)
         lines.append(f"  memory model: {mm}")
@@ -353,6 +360,24 @@ class ExecutionPlan:
 # --------------------------------------------------------------------------
 # Plan cache — the serving layer's compile-once seam
 # --------------------------------------------------------------------------
+
+#: CoresetSpec fields folded verbatim into the plan-cache key, in key
+#: order.  ``task`` and ``params`` are encoded specially (registry name;
+#: sorted item tuple).  The key-audit test asserts every CoresetSpec field
+#: appears here, in the special pair, or on PLAN_KEY_EXEMPT — so a new
+#: knob (fault_policy in PR 7, the integrity policy now) can never
+#: silently alias cached plans.
+PLAN_KEY_FIELDS = (
+    "engine", "backend", "jit", "budgets", "num_seeds", "block_size",
+    "chunk_blocks", "prefetch", "memory_budget_bytes", "sharded_masses",
+    "m_cap", "fault_policy",
+)
+
+#: Spec fields deliberately excluded from the cache key, each with the
+#: reason it cannot alias a cached plan.  Currently empty: every knob
+#: influences planning or execution.
+PLAN_KEY_EXEMPT: Tuple[str, ...] = ()
+
 
 class PlanCache:
     """Memoized :func:`compile_plan`, keyed by ``(task, dataset geometry,
@@ -403,12 +428,9 @@ class PlanCache:
     def key(spec: CoresetSpec, ds: VFLDataset) -> tuple:
         task = spec.task if isinstance(spec.task, str) else spec.task.name
         return (
-            task, ds.n, ds.dims, ds.y is not None,
-            spec.engine, spec.backend, spec.jit, spec.budgets,
-            spec.num_seeds, spec.block_size, spec.chunk_blocks,
-            spec.prefetch, spec.memory_budget_bytes, spec.sharded_masses,
-            spec.m_cap, spec.fault_policy,
-            tuple(sorted(spec.params.items())),
+            (task, ds.n, ds.dims, ds.y is not None)
+            + tuple(getattr(spec, f) for f in PLAN_KEY_FIELDS)
+            + (tuple(sorted(spec.params.items())),)
         )
 
     def get(self, spec: CoresetSpec, ds: VFLDataset) -> "ExecutionPlan":

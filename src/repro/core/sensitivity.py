@@ -84,20 +84,44 @@ def vrlr_local_scores(
     return leverage_scores(Xj, use_kernel=use_kernel) + 1.0 / n
 
 
-def batched_gram_pinv(G: jax.Array, rcond: float = 1e-6) -> jax.Array:
+def batched_gram_pinv(G: jax.Array, rcond: float = 1e-6,
+                      return_cond: bool = False, expected_rank=None):
     """Eigen-pseudo-inverse of a (T, s, s) stack of party Grams.
 
     The shared core of :func:`vrlr_scores_stacked` (one-shot Gram) and the
     streaming block-scan path (:mod:`repro.core.streaming`, Gram accumulated
     over row blocks): zero padding contributes zero eigenvalues that fall
     below the rcond cutoff, so the batched pinv equals the per-party one
-    embedded.
+    embedded.  The rcond cutoff is itself the conditioning guardrail — the
+    retained spectrum's condition number never exceeds 1/rcond, and a fully
+    degenerate Gram (constant-zero feature slice) inverts to the zero
+    matrix instead of exploding.
+
+    ``return_cond=True`` additionally returns the (T,) retained condition
+    numbers (top eigenvalue over the smallest eigenvalue clearing the
+    cutoff; +inf when nothing clears it) for the build's
+    :class:`~repro.core.integrity.HealthReport`.  Zero-padded columns
+    contribute legitimate below-cutoff eigenvalues, so real rank
+    deficiency is detected against ``expected_rank`` (the per-party valid
+    widths): a party whose RETAINED rank falls short — a constant or
+    duplicated feature slice — reports +inf.  The pinv itself is
+    bit-identical either way.
     """
     evals, evecs = jnp.linalg.eigh(G)
-    cutoff = rcond * jnp.maximum(evals.max(axis=1), 0.0)   # (T,)
-    inv = jnp.where(evals > cutoff[:, None],
-                    1.0 / jnp.maximum(evals, 1e-30), 0.0)
-    return jnp.einsum("tsu,tu,tru->tsr", evecs, inv, evecs)
+    top = jnp.maximum(evals.max(axis=1), 0.0)              # (T,)
+    cutoff = rcond * top
+    keep = evals > cutoff[:, None]
+    inv = jnp.where(keep, 1.0 / jnp.maximum(evals, 1e-30), 0.0)
+    M = jnp.einsum("tsu,tu,tru->tsr", evecs, inv, evecs)
+    if not return_cond:
+        return M
+    small = jnp.min(jnp.where(keep, evals, jnp.inf), axis=1)
+    cond = jnp.where(jnp.isfinite(small) & (small > 0.0),
+                     top / jnp.maximum(small, 1e-30), jnp.inf)
+    if expected_rank is not None:
+        rank = keep.sum(axis=1)
+        cond = jnp.where(rank < jnp.asarray(expected_rank), jnp.inf, cond)
+    return M, cond
 
 
 def vrlr_scores_stacked(

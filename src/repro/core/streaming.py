@@ -107,6 +107,9 @@ class StreamScorer:
     data_passes: int
     score_blocks: Optional[Callable[[Sequence[int]], jax.Array]] = None
     chunk_blocks: int = 1
+    # (T,) retained condition numbers of the accumulated party Grams (VRLR
+    # scorers only; None elsewhere) — feeds the build's HealthReport
+    gram_conds: Optional[jax.Array] = None
 
 
 # (task name) -> factory(key, ds, block_size, backend, probe, **params)
@@ -345,10 +348,11 @@ def vrlr_stream_scorer(
     probe = probe or _noop
     use_kernel = backend == "pallas"
     nb, bs = ds.block_geometry(block_size)
-    _, s = ds.stacked_widths(with_labels=True)
+    widths, s = ds.stacked_widths(with_labels=True)
     n = ds.n
     C = max(1, min(int(chunk_blocks), nb))
     pipelined = C > 1 or prefetch
+    gram_conds = None
 
     if backend == "norm":
         def score_block(b: int) -> jax.Array:
@@ -391,7 +395,8 @@ def vrlr_stream_scorer(
                 G = _gram_step(G, blk, nvalid, use_kernel=use_kernel)
                 _ckpt_save(ckpt, "gram", b + 1, G)
                 probe()
-        M = batched_gram_pinv(G, rcond)
+        M, gram_conds = batched_gram_pinv(G, rcond, return_cond=True,
+                                          expected_rank=widths)
 
         def score_block(b: int) -> jax.Array:
             blk, nvalid = ds.block(b, block_size, with_labels=True)
@@ -421,7 +426,7 @@ def vrlr_stream_scorer(
     return StreamScorer(T=ds.T, n=n, nb=nb, bs=bs, masses=masses,
                         dis_key=key, score_block=score_block,
                         data_passes=passes, score_blocks=score_blocks,
-                        chunk_blocks=C)
+                        chunk_blocks=C, gram_conds=gram_conds)
 
 
 # --------------------------------------------------------------------------

@@ -84,6 +84,7 @@ class VFLDataset:
 
     parts: List[jnp.ndarray]            # party j's local block (n, d_j)
     y: Optional[jnp.ndarray] = None     # (n,), stored at party T-1
+    validate: bool = True               # NaN/Inf screen at construction
 
     def __post_init__(self) -> None:
         if not self.parts:
@@ -101,6 +102,37 @@ class VFLDataset:
                 raise ValueError(f"party {j}: bad shape {p.shape}")
         if self.y is not None and self.y.shape[0] != n:
             raise ValueError("label length mismatch")
+        if self.validate:
+            self._validate_values()
+
+    def _validate_values(self) -> None:
+        """NaN/Inf screen: a single non-finite cell poisons every Gram /
+        distance it touches downstream, so fail loudly at ingest and name
+        the offender.  Skipped for traced arrays (``_exec_fused`` constructs
+        datasets inside jit) and via ``validate=False`` when non-finite
+        values are intentional (e.g. corruption-injection tests)."""
+        named = [(f"party {j}", p) for j, p in enumerate(self.parts)]
+        if self.y is not None:
+            named.append((f"labels (party {self.T - 1})", self.y))
+        for name, a in named:
+            if isinstance(a, jax.core.Tracer):
+                continue
+            vals = np.asarray(a)
+            if not np.issubdtype(vals.dtype, np.inexact):
+                continue
+            finite = np.isfinite(vals)
+            if finite.all():
+                continue
+            loc = np.argwhere(~finite)[0]
+            where = (f"row {loc[0]}, column {loc[1]}" if loc.size == 2
+                     else f"row {loc[0]}")
+            bad = vals[tuple(loc)]
+            kind = "NaN" if np.isnan(bad) else "Inf"
+            raise ValueError(
+                f"non-finite value ({kind}) in {name} at {where}; "
+                f"clean the feed or construct with validate=False to "
+                f"bypass the ingest screen"
+            )
 
     @property
     def n(self) -> int:

@@ -316,6 +316,10 @@ class CoresetService:
             "batched_flushes": self.batched_flushes,
             "batched_cells": self.batched_cells,
             "pending": len(self._pending),
+            "health_checks": sum(st.tree.health_checks
+                                 for st in self._tenants.values()),
+            "health_warnings": sum(st.tree.health_warnings
+                                   for st in self._tenants.values()),
         }
 
     def describe(self) -> str:

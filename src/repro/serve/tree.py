@@ -55,6 +55,7 @@ from repro.core.comm import CommLedger, CommSchedule
 from repro.core.coreset import MaterializedCoreset
 from repro.core.dis import dis_plan_full, uniform_plan
 from repro.core.faults import StreamCheckpoint, Transport, deliver_or_record
+from repro.core.integrity import HealthReport, check_merge_children
 from repro.core.plan import CoresetSpec, PlanCache
 from repro.core.vfl import VFLDataset
 
@@ -100,6 +101,11 @@ def merge_reduce(
     task = get_task(task)
     params = dict(params or {})
     mats = list(mats)
+    # integrity pre-checks: child weights positive/finite, and no global id
+    # in two different children (children summarize disjoint stream
+    # segments; a collision means a corrupted upload or broken offsets)
+    check_merge_children([mt.indices for mt in mats],
+                         [mt.weights for mt in mats])
     union = MaterializedCoreset.concat(mats)
     ds_u = union.dataset()
     T = ds_u.T
@@ -251,6 +257,11 @@ class CoresetTree:
         self.n_total = 0
         self._merge_ops = 0
         self.last_insert: Optional[InsertStats] = None
+        # numerical-health census over leaf builds (merge unions re-score
+        # already-validated rows, so leaves are where health is measured)
+        self.health_checks = 0
+        self.health_warnings = 0
+        self.last_health: Optional[HealthReport] = None
 
     # -- the deterministic key chain ----------------------------------------
 
@@ -292,14 +303,19 @@ class CoresetTree:
         (nodes themselves are immutable once placed), the key-chain
         counters, and a ledger rollback mark."""
         return (list(self.levels), self.num_chunks, self.n_total,
-                self._merge_ops, self.ledger.mark())
+                self._merge_ops, self.health_checks, self.health_warnings,
+                self.last_health, self.ledger.mark())
 
     def _restore(self, snap) -> None:
-        levels, num_chunks, n_total, merge_ops, mark = snap
+        (levels, num_chunks, n_total, merge_ops,
+         health_checks, health_warnings, last_health, mark) = snap
         self.levels = levels
         self.num_chunks = num_chunks
         self.n_total = n_total
         self._merge_ops = merge_ops
+        self.health_checks = health_checks
+        self.health_warnings = health_warnings
+        self.last_health = last_health
         self.ledger.rollback(mark)
 
     # -- the operations ------------------------------------------------------
@@ -342,6 +358,11 @@ class CoresetTree:
         cs = pipe.build(spec, key=self.leaf_key(self.num_chunks),
                         ledger=self.ledger, transport=self.transport,
                         checkpoint=self.checkpoint)
+        if cs.health is not None:
+            self.health_checks += 1
+            if not cs.health.healthy:
+                self.health_warnings += 1
+            self.last_health = cs.health
         node = TreeNode(
             level=0, chunks=1, rows=chunk_rows,
             cs=MaterializedCoreset.from_coreset(cs, ds, offset=self.n_total),
@@ -421,6 +442,13 @@ class CoresetTree:
             f"  height={self.height} nodes={self.num_nodes} "
             f"m_active={self.m_active} comm={self.ledger.total}",
         ]
+        if self.health_checks:
+            status = ("ok" if self.last_health is None
+                      or self.last_health.healthy else "WARN")
+            lines.append(
+                f"  health: {self.health_checks} checked, "
+                f"{self.health_warnings} warning(s), last={status}"
+            )
         for level, chunks, m in sorted(occ, reverse=True):
             lines.append(f"  level {level}: {chunks} chunk(s), m={m}")
         return "\n".join(lines)

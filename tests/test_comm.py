@@ -73,3 +73,64 @@ def test_merge_schedule_rejects_negative():
         CommSchedule.merge(2, -1, 4)
     with pytest.raises(ValueError):
         CommSchedule.merge(2, 4, -1)
+
+
+# -- mark/rollback/since + by_prefix edge cases (integrity PR satellites) ----
+
+
+def _led_with(entries):
+    led = CommLedger()
+    for tag, units in entries:
+        led.party_to_server(tag, 0, units)
+    return led
+
+
+def test_mark_rollback_nesting():
+    led = _led_with([("a/x", 1), ("a/y", 2)])
+    outer = led.mark()
+    led.party_to_server("b/x", 0, 4)
+    inner = led.mark()
+    led.party_to_server("b/y", 0, 8)
+    assert led.total == 15 and led.since(outer) == 12 and led.since(inner) == 8
+    led.rollback(inner)                      # unwind the inner bracket only
+    assert led.total == 7 and led.by_tag().get("b/y") is None
+    assert led.since(outer) == 4
+    led.rollback(outer)                      # then the outer one
+    assert led.total == 3 and led.by_prefix("b/") == 0
+    assert led.by_tag() == {"a/x": 1, "a/y": 2}
+
+
+def test_rollback_after_rollback_and_validation():
+    led = _led_with([("t", 5)])
+    mark = led.mark()
+    led.party_to_server("t", 0, 7)
+    led.rollback(mark)
+    led.rollback(mark)                       # idempotent at the same mark
+    assert led.total == 5
+    led.party_to_server("u", 0, 1)
+    with pytest.raises(ValueError, match="bad mark"):
+        led.rollback(99)
+    with pytest.raises(ValueError, match="bad mark"):
+        led.rollback(-1)
+    with pytest.raises(ValueError, match="bad mark"):
+        led.since(99)
+    # a stale mark BEYOND a rollback is invalid and says so
+    deep = led.mark()
+    led.rollback(mark)
+    with pytest.raises(ValueError, match=f"bad mark {deep}"):
+        led.rollback(deep)
+
+
+def test_by_prefix_edge_cases():
+    led = _led_with([("dis/round1/G_j", 3), ("dis/round2/S_up", 5),
+                     ("retry/dis/round2/S_up", 5), ("disjoint", 11)])
+    assert led.by_prefix("") == led.total == 24
+    # prefixes are string prefixes, not path components: "dis" catches the
+    # lookalike tag too; "dis/" does not
+    assert led.by_prefix("dis") == 19
+    assert led.by_prefix("dis/") == 8
+    assert led.by_prefix("retry/") == 5
+    assert led.by_prefix("retry/dis/round2/S_up") == 5
+    assert led.by_prefix("nope/") == 0
+    empty = CommLedger()
+    assert empty.by_prefix("") == 0 and empty.since(empty.mark()) == 0

@@ -1,0 +1,540 @@
+"""Integrity-verified wire: checksummed envelopes, silent-corruption
+defense, value-level validators, poisoned-party quarantine, and the
+numerical-health guardrails.  (PR: integrity-verified wire.)
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CommLedger,
+    Coreset,
+    CoresetPipeline,
+    CoresetSpec,
+    FaultPlan,
+    HealthReport,
+    IntegrityError,
+    MaterializedCoreset,
+    PartyUnavailable,
+    PlanCache,
+    Transport,
+    VFLDataset,
+    WireEnvelope,
+    check_mass_table,
+    check_merge_children,
+    check_weights,
+    health_from_masses,
+    payload_digest,
+    perturb_payload,
+    require_valid_masses,
+    split_uploads,
+)
+from repro.core.faults import SILENT_KINDS, _fault_draw
+from repro.core.plan import PLAN_KEY_EXEMPT, PLAN_KEY_FIELDS, compile_plan
+from repro.serve import CoresetService, CoresetTree
+from repro.serve.tree import merge_reduce
+
+BLOCK = 128
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_programs():
+    yield
+    jax.clear_caches()
+
+
+def _ds(seed=0, n=600, dims=(3, 2, 2), labels=True):
+    rng = np.random.default_rng(seed)
+    parts = [rng.normal(size=(n, d)).astype(np.float32) for d in dims]
+    y = None
+    if labels:
+        theta = np.linspace(1.0, -1.0, dims[0]).astype(np.float32)
+        y = (parts[0] @ theta
+             + 0.1 * rng.normal(size=n).astype(np.float32))
+    return VFLDataset(parts, y)
+
+
+def _spec(engine="materialized", policy="fail", task="vrlr", m=32, **kw):
+    params = {"k": 3} if task == "vkmc" else {}
+    params.update(kw.pop("params", {}))
+    return CoresetSpec(task=task, budgets=m, engine=engine, backend="ref",
+                       fault_policy=policy, params=params,
+                       block_size=BLOCK, **kw)
+
+
+def _same_draw(a: Coreset, b: Coreset) -> bool:
+    return (np.array_equal(np.asarray(a.indices), np.asarray(b.indices))
+            and np.array_equal(np.asarray(a.weights), np.asarray(b.weights)))
+
+
+# -- WireEnvelope + payload digest -------------------------------------------
+
+
+def test_envelope_roundtrip_and_digest_stability():
+    x = np.arange(12, dtype=np.float32).reshape(3, 4)
+    env = WireEnvelope.seal("dis/round1/G_j", 1, x)
+    assert env.verify(x)
+    assert env.verify(x.copy())                  # value equality, not identity
+    assert payload_digest(x) == payload_digest(x.copy())
+    # non-contiguous views digest by VALUE
+    assert payload_digest(x[:, ::2]) == payload_digest(
+        np.ascontiguousarray(x[:, ::2]))
+
+
+@pytest.mark.parametrize("kind", SILENT_KINDS)
+def test_envelope_detects_every_corruption_kind(kind):
+    x = np.linspace(0.5, 4.0, 16, dtype=np.float32)
+    env = WireEnvelope.seal("t", 0, x)
+    bad = perturb_payload(x, kind, 0.37)
+    assert not np.array_equal(bad, x)
+    assert not env.verify(bad)
+    assert env.mismatch(bad) == "payload digest mismatch"
+    # the original is never touched — the honest sender can retransmit
+    assert env.verify(x)
+
+
+def test_envelope_names_shape_and_dtype_mismatches():
+    env = WireEnvelope.seal("t", 0, np.ones((4,), np.float32))
+    assert "shape" in env.mismatch(np.ones((5,), np.float32))
+    assert "dtype" in env.mismatch(np.ones((4,), np.float64))
+
+
+def test_perturb_payload_semantics():
+    x = np.array([1.0, -2.0, 3.0], np.float32)
+    assert np.array_equal(perturb_payload(x, "sign", 0.0), -x)
+    scaled = perturb_payload(x, "scale", 0.5)
+    np.testing.assert_allclose(scaled / x, (scaled / x)[0])    # uniform factor
+    assert float(abs(scaled[0] / x[0])) >= 10.0
+    poked = perturb_payload(x, "nan", 0.4)
+    assert np.isnan(poked).sum() == 1
+    # integer payloads: nan degrades to sign, scale stays integral
+    idx = np.array([3, 7, 9], np.int64)
+    assert np.array_equal(perturb_payload(idx, "nan", 0.1), -idx)
+    assert perturb_payload(idx, "scale", 0.9).dtype == idx.dtype
+    with pytest.raises(ValueError, match="unknown corruption kind"):
+        perturb_payload(x, "bitrot", 0.1)
+
+
+# -- FaultPlan silent-corruption fates ---------------------------------------
+
+
+def test_silent_fate_deterministic_and_separately_namespaced():
+    mk = lambda: FaultPlan(seed=5, silent_corrupt=0.6)
+    grid = [("dis/round1/G_j", j, a) for j in range(3) for a in range(4)]
+    f1 = [mk().silent_fate(*g) for g in grid]
+    f2 = [mk().silent_fate(*g) for g in grid]
+    assert f1 == f2
+    assert any(f is not None for f in f1)
+    assert any(f is None for f in f1)
+    # enabling silent corruption never shifts the drop/corrupt/delay chain
+    base = FaultPlan(seed=5, drop=0.3)
+    noisy = FaultPlan(seed=5, drop=0.3, silent_corrupt=0.6)
+    fates = [base.decide(*g) for g in grid]
+    assert [noisy.decide(*g) for g in grid] == fates
+
+
+def test_zero_silent_rate_consumes_no_draws():
+    plan = FaultPlan(seed=999123, silent_corrupt={1: 0.5})
+    _fault_draw.cache_clear()
+    assert plan.silent_fate("some/tag", 0, 0) is None   # rate 0 for party 0
+    assert _fault_draw.cache_info().misses == 0
+    assert not FaultPlan(seed=0).is_null or True
+    assert not FaultPlan(seed=0, silent_corrupt=0.1).is_null
+    assert FaultPlan.none().is_null
+
+
+def test_silent_kind_pins_flavor_and_validates():
+    plan = FaultPlan(seed=1, silent_corrupt=1.0, silent_kind="nan")
+    for a in range(4):
+        kind, u = plan.silent_fate("t", 0, a)
+        assert kind == "nan" and 0.0 <= u < 1.0
+    with pytest.raises(ValueError, match="silent_kind"):
+        FaultPlan(silent_kind="bitrot")
+    with pytest.raises(ValueError, match="silent_corrupt"):
+        FaultPlan(silent_corrupt=1.5)
+
+
+# -- Transport.ship: the envelope seam ---------------------------------------
+
+
+def test_ship_clean_path_returns_original_objects_and_bills_nothing():
+    tr = Transport(FaultPlan.none())
+    led = CommLedger()
+    payloads = {j: np.arange(4, dtype=np.float32) + j for j in range(3)}
+    delivered, failed = tr.ship("dis/round1/G_j", payloads, led)
+    assert not failed and led.total == 0
+    for j in range(3):
+        assert delivered[j] is payloads[j]        # identity, not a copy
+    assert tr.stats.silent_corrupts == tr.stats.silent_detected == 0
+
+
+def test_ship_detects_retransmits_and_bills_exact_retry_units():
+    # party 0 corrupts ~60% of attempts; a verifying transport catches every
+    # one, retransmits, and delivers the ORIGINAL bytes
+    plan = FaultPlan(seed=7, silent_corrupt={0: 0.6}, max_retries=16)
+    tr = Transport(plan)
+    led = CommLedger()
+    payloads = {0: np.ones(5, np.float32), 1: np.ones(5, np.float32) * 2}
+    units = {0: 5, 1: 5}
+    delivered, failed = tr.ship("dis/round2/S_up", payloads, led, units=units)
+    assert not failed
+    assert delivered[0] is payloads[0] and delivered[1] is payloads[1]
+    assert tr.stats.silent_corrupts == tr.stats.silent_detected > 0
+    assert led.by_prefix("retry/dis/round2/S_up") == \
+        5 * tr.stats.silent_detected
+    assert led.total == led.by_prefix("retry/")   # ship never bills base tags
+
+
+def test_ship_unverified_delivers_damaged_payloads():
+    plan = FaultPlan(seed=7, silent_corrupt={0: 1.0}, silent_kind="sign")
+    tr = Transport(plan, verify=False)
+    payloads = {0: np.ones(4, np.float32), 1: np.ones(4, np.float32)}
+    delivered, failed = tr.ship("t", payloads)
+    assert not failed
+    assert np.array_equal(delivered[0], -payloads[0])
+    assert delivered[1] is payloads[1]
+    assert tr.stats.silent_corrupts == 1 and tr.stats.silent_detected == 0
+
+
+def test_ship_exhaustion_raises_or_drops():
+    plan = FaultPlan(seed=0, silent_corrupt={0: 1.0}, max_retries=2)
+    with pytest.raises(PartyUnavailable):
+        Transport(plan).ship("t", {0: np.ones(3, np.float32)})
+    tr = Transport(plan)
+    delivered, failed = tr.ship("t", {0: np.ones(3, np.float32)},
+                                drop_on_exhaust=True)
+    assert 0 not in delivered and failed[0].party == 0
+    assert failed[0].attempts == 3                # 1 + max_retries
+
+
+# -- value-level validators ---------------------------------------------------
+
+
+def test_check_mass_table_findings():
+    clean = np.abs(np.random.default_rng(0).normal(size=(3, 8))) + 0.1
+    assert check_mass_table(clean, clean.sum(axis=1)) == []
+    nanned = clean.copy()
+    nanned[1, 3] = np.nan
+    f = check_mass_table(nanned)
+    assert [x.party for x in f] == [1] and "non-finite" in f[0].reason
+    neg = clean.copy()
+    neg[2] *= -1.0
+    f = check_mass_table(neg)
+    assert [x.party for x in f] == [2] and "negative" in f[0].reason
+    # row sum vs the independently communicated scalar total
+    lied = clean.copy()
+    lied[0] *= 100.0
+    f = check_mass_table(lied, clean.sum(axis=1))
+    assert [x.party for x in f] == [0] and "round-1 scalar" in f[0].reason
+    # total-sensitivity bound, attributed to the largest contributor
+    f = check_mass_table(lied, lied.sum(axis=1), bound=float(clean.sum()))
+    assert [x.party for x in f] == [0] and "exceeds the task bound" in f[0].reason
+
+
+def test_require_valid_masses_policies():
+    bad = np.array([[1.0, np.nan], [1.0, 1.0]])
+    assert require_valid_masses(bad, policy="quarantine") == (0,)
+    with pytest.raises(IntegrityError, match="party 0.*non-finite"):
+        require_valid_masses(bad, policy="fail")
+    assert require_valid_masses(np.ones((2, 2)), np.full(2, 2.0)) == ()
+
+
+def test_check_weights():
+    assert check_weights(np.array([0.5, 2.0])) is None
+    assert "empty" in check_weights(np.array([]))
+    assert "non-finite" in check_weights(np.array([1.0, np.inf]))
+    assert "<= 0" in check_weights(np.array([1.0, 0.0]))
+
+
+def test_check_merge_children():
+    a = np.array([0, 1, 1, 2])          # within-child repeats are legal
+    b = np.array([5, 6, 7])
+    check_merge_children([a, b], [np.ones(4), np.ones(3)])
+    with pytest.raises(IntegrityError, match="share 1 global id"):
+        check_merge_children([a, np.array([2, 9])],
+                             [np.ones(4), np.ones(2)])
+    with pytest.raises(IntegrityError, match="merge child 1"):
+        check_merge_children([a, b], [np.ones(4), -np.ones(3)])
+
+
+# -- HealthReport -------------------------------------------------------------
+
+
+def test_health_from_masses():
+    h = health_from_masses(np.ones((2, 4)))
+    assert h.healthy and h.finite_fraction == 1.0 and h.mass_total == 8.0
+    assert h.party_shares == (0.5, 0.5) and h.max_cell_share == 0.125
+    sick = np.ones((2, 4))
+    sick[0, 0] = np.nan
+    h = health_from_masses(sick)
+    assert not h.healthy and h.finite_fraction == 7 / 8
+    assert any("non-finite" in n for n in h.notes)
+    h = health_from_masses(np.zeros((2, 2)))
+    assert not h.healthy and h.zero_mass_parties == (0, 1)
+    assert any("zero total" in n for n in h.notes)
+    h = health_from_masses(np.ones((2, 2)), gram_conds=[3.0, np.inf])
+    assert not h.healthy and any("singular" in n for n in h.notes)
+    assert "Gram condition" in h.describe()
+    h = health_from_masses(np.ones((2, 2)), gram_conds=[3.0, 1e12])
+    assert any("exceeds" in n for n in h.notes)
+
+
+# -- builds: health attachment + clean-path bit-identity ----------------------
+
+
+@pytest.mark.parametrize("engine", ["materialized", "streamed", "pipelined"])
+def test_builds_attach_healthy_reports(engine):
+    ds = _ds()
+    cs = CoresetPipeline(ds).build(_spec(engine=engine),
+                                   key=jax.random.PRNGKey(0))
+    assert isinstance(cs.health, HealthReport)
+    assert cs.health.healthy and cs.health.finite_fraction == 1.0
+    assert len(cs.health.party_shares) == ds.T
+    if engine != "materialized":                    # streaming vrlr: conds
+        assert cs.health.gram_conds is not None
+        assert all(np.isfinite(c) for c in cs.health.gram_conds)
+
+
+def test_constant_feature_party_builds_with_health_note():
+    ds = _ds()
+    parts = [p.copy() for p in ds.parts]
+    parts[1][:] = 1.0                               # rank-1 slice: singular Gram
+    sick = VFLDataset(parts, ds.y)
+    cs = CoresetPipeline(sick).build(_spec(engine="pipelined"),
+                                     key=jax.random.PRNGKey(0))
+    assert cs.m == 32                               # the build still completes
+    assert cs.health.gram_conds is not None
+    assert not np.isfinite(cs.health.gram_conds[1])
+    assert not cs.health.healthy
+    assert any("singular" in n or "condition" in n for n in cs.health.notes)
+
+
+@pytest.mark.parametrize("engine", ["materialized", "streamed", "pipelined"])
+@pytest.mark.parametrize("policy", ["fail", "retry", "degrade", "quarantine"])
+def test_null_transport_bit_identical_under_every_policy(engine, policy):
+    """Integrity on + no faults => draws AND ledger entries bit-identical
+    to the transportless build, for every engine and policy."""
+    ds = _ds()
+    led0, led1 = CommLedger(), CommLedger()
+    base = CoresetPipeline(ds).build(_spec(engine=engine),
+                                     key=jax.random.PRNGKey(3), ledger=led0)
+    tr = Transport(FaultPlan.none())
+    got = CoresetPipeline(ds).build(_spec(engine=engine, policy=policy),
+                                    key=jax.random.PRNGKey(3), ledger=led1,
+                                    transport=tr)
+    assert _same_draw(base, got)
+    assert got.degraded is None
+    assert [dataclasses.astuple(m) for m in led1.messages] == \
+           [dataclasses.astuple(m) for m in led0.messages]
+    assert tr.stats.silent_corrupts == 0
+
+
+# -- quarantine end to end ----------------------------------------------------
+
+
+def _poison(party, kind="sign"):
+    """Party `party` silently corrupts every transmission; the wire does NOT
+    verify, so the damage reaches the server's validators."""
+    return Transport(FaultPlan(seed=11, silent_corrupt={party: 1.0},
+                               silent_kind=kind), verify=False)
+
+
+@pytest.mark.parametrize("engine", ["materialized", "pipelined"])
+def test_quarantine_drops_poisoned_party_and_issues_receipt(engine):
+    ds = _ds()
+    led = CommLedger()
+    cs = CoresetPipeline(ds).build(_spec(engine=engine, policy="quarantine"),
+                                   key=jax.random.PRNGKey(3), ledger=led,
+                                   transport=_poison(0))
+    assert cs.degraded is not None
+    assert cs.degraded.surviving == (1, 2)
+    assert [d.party for d in cs.degraded.dropped] == [0]
+    assert "quarantine" in cs.degraded.dropped[0].tag
+    assert "quarantined for integrity violations" in cs.degraded.describe()
+    assert cs.m == 32 and check_weights(cs.weights) is None
+    # the survivors' draw matches a 2-party rebuild on the same key
+    sub = ds.select_parties([1, 2])
+    ref = CoresetPipeline(sub).build(_spec(engine=engine),
+                                     key=jax.random.PRNGKey(3))
+    assert _same_draw(ref, cs)
+
+
+@pytest.mark.parametrize("engine", ["materialized", "pipelined"])
+def test_fail_policy_raises_party_attributed_error(engine):
+    ds = _ds()
+    with pytest.raises(IntegrityError, match="party 0"):
+        CoresetPipeline(ds).build(_spec(engine=engine, policy="fail"),
+                                  key=jax.random.PRNGKey(3),
+                                  transport=_poison(0))
+
+
+def test_quarantining_the_label_party_is_unrecoverable():
+    ds = _ds()
+    with pytest.raises(IntegrityError, match="label party"):
+        CoresetPipeline(ds).build(_spec(policy="quarantine"),
+                                  key=jax.random.PRNGKey(3),
+                                  transport=_poison(ds.T - 1))
+
+
+def test_retry_policy_trusts_values_the_undefended_baseline():
+    """Under `retry` with an unverifying wire the corrupted masses drive
+    the draw — the exact blow-up the integrity benchmark measures."""
+    ds = _ds()
+    base = CoresetPipeline(ds).build(_spec(), key=jax.random.PRNGKey(3))
+    got = CoresetPipeline(ds).build(_spec(policy="retry"),
+                                    key=jax.random.PRNGKey(3),
+                                    transport=_poison(0, kind="scale"))
+    assert got.degraded is None
+    assert not _same_draw(base, got)              # the corruption skewed it
+
+
+# -- round-2 uploads + split_uploads ------------------------------------------
+
+
+def test_split_uploads_roundtrip_and_validation():
+    idx = np.arange(10)
+    parts = split_uploads(idx, np.array([4, 0, 6]))
+    assert [len(p) for p in parts] == [4, 0, 6]
+    assert np.array_equal(np.concatenate(parts), idx)
+    with pytest.raises(ValueError):
+        split_uploads(idx, np.array([4, 4]))
+
+
+def test_round2_corruption_detected_and_retried_with_exact_billing():
+    """A verifying wire catches round-2 index corruption; the build lands
+    draw-identical to fault-free, with the retries billed at a_j units."""
+    ds = _ds()
+    base = CoresetPipeline(ds).build(_spec(), key=jax.random.PRNGKey(3))
+    led = CommLedger()
+    plan = FaultPlan(seed=13, silent_corrupt=0.4, max_retries=16)
+    tr = Transport(plan)
+    got = CoresetPipeline(ds).build(_spec(policy="retry"),
+                                    key=jax.random.PRNGKey(3), ledger=led,
+                                    transport=tr)
+    assert _same_draw(base, got)
+    assert tr.stats.silent_detected == tr.stats.silent_corrupts > 0
+    retry_units = led.by_prefix("retry/")
+    assert retry_units == tr.stats.units_retried
+    assert got.comm_units == base.comm_units + retry_units
+
+
+# -- plan integration ---------------------------------------------------------
+
+
+def test_plan_cache_key_audits_every_spec_field():
+    """Every CoresetSpec field must be in the cache key (PLAN_KEY_FIELDS or
+    the task/params pair) or explicitly exempted — a new field that silently
+    misses the key would alias distinct plans."""
+    fields = {f.name for f in dataclasses.fields(CoresetSpec)}
+    covered = {"task", "params"} | set(PLAN_KEY_FIELDS) | set(PLAN_KEY_EXEMPT)
+    assert fields == covered, (
+        f"CoresetSpec fields {sorted(fields - covered)} missing from the "
+        f"PlanCache key; add to PLAN_KEY_FIELDS or PLAN_KEY_EXEMPT"
+    )
+    ds = _ds(n=64)
+    a = PlanCache.key(_spec(), ds)
+    assert PlanCache.key(_spec(), ds) == a
+    assert PlanCache.key(_spec(policy="quarantine"), ds) != a
+    assert PlanCache.key(_spec(m=33), ds) != a
+
+
+def test_plan_describe_surfaces_integrity_line():
+    ds = _ds(n=64)
+    d = compile_plan(_spec(policy="fail"), ds).describe()
+    assert "integrity:" in d and "validators on" in d
+    d = compile_plan(_spec(engine="streamed", policy="retry"), ds).describe()
+    assert "validators off" in d and "(policy=retry)" in d
+
+
+# -- dataset ingest validation (satellite) ------------------------------------
+
+
+def test_vfl_dataset_nan_screen_names_party_and_column():
+    rng = np.random.default_rng(0)
+    parts = [rng.normal(size=(8, 3)).astype(np.float32) for _ in range(2)]
+    parts[1][4, 2] = np.nan
+    with pytest.raises(ValueError, match=r"NaN.*party 1 at row 4, column 2"):
+        VFLDataset(parts)
+    with pytest.raises(ValueError, match=r"Inf.*party 0"):
+        bad = [p.copy() for p in parts]
+        bad[1][4, 2] = 0.0
+        bad[0][0, 0] = np.inf
+        VFLDataset(bad)
+    y = rng.normal(size=8).astype(np.float32)
+    y[3] = np.nan
+    parts[1][4, 2] = 0.0
+    with pytest.raises(ValueError, match=r"labels \(party 1\) at row 3"):
+        VFLDataset(parts, y)
+    # the opt-out accepts the same data
+    ds = VFLDataset(parts, y, validate=False)
+    assert ds.n == 8
+
+
+def test_vfl_dataset_structural_errors_unchanged():
+    with pytest.raises(ValueError, match="parts is empty"):
+        VFLDataset([])
+    with pytest.raises(ValueError, match="n=0"):
+        VFLDataset([np.zeros((0, 2), np.float32)])
+    with pytest.raises(ValueError, match="party 1: bad shape"):
+        VFLDataset([np.zeros((4, 2), np.float32),
+                    np.zeros((3, 2), np.float32)])
+    with pytest.raises(ValueError, match="label length mismatch"):
+        VFLDataset([np.zeros((4, 2), np.float32)], np.zeros(3, np.float32))
+
+
+# -- tree + service integration -----------------------------------------------
+
+
+def _chunk(rng, n=200, dims=(3, 2, 2)):
+    parts = [rng.normal(size=(n, d)).astype(np.float32) for d in dims]
+    y = parts[0] @ np.linspace(1.0, -1.0, dims[0]).astype(np.float32)
+    return parts, y.astype(np.float32)
+
+
+def test_merge_reduce_rejects_cross_child_id_clash():
+    rng = np.random.default_rng(0)
+    parts = [rng.normal(size=(4, 2)).astype(np.float32)]
+    mk = lambda ids: MaterializedCoreset(
+        indices=np.asarray(ids, np.int64), weights=np.ones(len(ids)),
+        parts=[parts[0][:len(ids)]], y=None)
+    with pytest.raises(IntegrityError, match="disjoint stream segments"):
+        merge_reduce("uniform", [mk([0, 1, 2]), mk([2, 8])], 2,
+                     key=jax.random.PRNGKey(0))
+
+
+def test_tree_tracks_leaf_health_and_describes_it():
+    rng = np.random.default_rng(0)
+    tree = CoresetTree("vrlr", 24, key=jax.random.PRNGKey(0), backend="ref",
+                       block_size=BLOCK)
+    for _ in range(3):
+        tree.insert(*_chunk(rng))
+    assert tree.health_checks == 3 and tree.health_warnings == 0
+    assert tree.last_health is not None and tree.last_health.healthy
+    assert "health: 3 checked, 0 warning(s), last=ok" in tree.describe()
+
+
+def test_tree_rolls_back_health_census_on_failed_insert():
+    rng = np.random.default_rng(0)
+    tree = CoresetTree("vrlr", 24, key=jax.random.PRNGKey(0), backend="ref",
+                       block_size=BLOCK)
+    tree.insert(*_chunk(rng))
+    snap = (tree.health_checks, tree.health_warnings, tree.last_health)
+    parts, y = _chunk(rng)
+    with pytest.raises(ValueError):
+        tree.insert([p[:0] for p in parts], y[:0])   # zero-row chunk
+    assert (tree.health_checks, tree.health_warnings,
+            tree.last_health) == snap
+
+
+def test_service_stats_aggregate_health():
+    svc = CoresetService(backend="ref")
+    svc.register("a", task="vrlr", budget=24, seed=1, block_size=BLOCK)
+    rng = np.random.default_rng(1)
+    svc.insert("a", *_chunk(rng))
+    svc.insert("a", *_chunk(rng))
+    s = svc.stats()
+    assert s["health_checks"] == 2 and s["health_warnings"] == 0

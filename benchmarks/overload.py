@@ -1,0 +1,351 @@
+"""Overload benchmark: the service under a hostile tenant mix.
+
+Three experiments under the ``overload`` section of BENCH_kernels.json,
+each with an ASSERTED gate (run with ``--strict`` in CI — a regression
+fails the build instead of recording a bad number):
+
+* ``hostile_mix`` — normal, greedy (rate-limited), slow (deadline-pressed)
+  and faulty (all parties dropping) tenants share one service.  Gates:
+  **shed-not-stall** — every issued request yields a success receipt, a
+  shed receipt, or a billed party-failure (zero requests lost without an
+  artifact); normal tenants are never shed and their p99 insert latency
+  stays bounded; the greedy tenant IS shed (rate_limit) and the slow
+  tenant's deadline aborts are rolled back (tree state unaffected).
+* ``breaker_isolation`` — the faulty tenant trips its circuit breaker
+  (consecutive retry exhaustions), post-trip requests shed fast with
+  ``breaker_open`` receipts, and — the isolation pin — a normal tenant
+  sharing the service produces a final query BIT-IDENTICAL to the same
+  tenant running alone on a fresh service.
+* ``failover_identity`` — the acceptance pin: a tenant whose pipelined
+  leaf builds are forced over ``memory_budget_bytes=1`` falls back to the
+  streamed engine, yielding indices/weights bit-identical to an unforced
+  twin tenant and a ledger equal to the twin's bill plus zero-unit
+  ``fallback/`` attributions.
+
+All admission state machines run on a shared
+:class:`~repro.core.faults.SimClock` (tick-per-read), so the shed pattern
+is deterministic; latencies are wall-clock.
+
+  PYTHONPATH=src python -m benchmarks.overload --fast
+  PYTHONPATH=src python -m benchmarks.run --sections overload
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import write_bench_json, write_rows
+from repro.core.faults import Deadline, FaultPlan, PartyUnavailable, SimClock, Transport
+from repro.serve import CoresetService, InsertReceipt, QueryReceipt, ShedReceipt
+
+BENCH = "overload"
+SECTION = "overload"
+
+P99_GATE_S = 10.0       # absolute bound on normal-tenant insert p99 (CI-safe)
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def _chunk_stream(seed, num, rows, d, T):
+    rng = np.random.default_rng(seed)
+    theta = rng.standard_normal(d).astype(np.float32)
+    base, rem = divmod(d, T)
+    widths = [base + (1 if j < rem else 0) for j in range(T)]
+    chunks = []
+    for _ in range(num):
+        X = rng.standard_normal((rows, d)).astype(np.float32)
+        y = X @ theta + 0.1 * rng.standard_normal(rows).astype(np.float32)
+        parts, start = [], 0
+        for w in widths:
+            parts.append(X[:, start:start + w])
+            start += w
+        chunks.append((parts, y))
+    return chunks
+
+
+# --------------------------------------------------------------------------
+# Experiment 1: hostile mix — shed, don't stall
+# --------------------------------------------------------------------------
+
+def run_hostile_mix(fast: bool):
+    num_chunks = 4 if fast else 8
+    rows = 1024 if fast else 8192
+    m, d, T = 64, 6, 3
+    greedy_burst = 6 if fast else 12     # requests the greedy tenant fires per round
+
+    clock = SimClock(tick=0.01)
+    svc = CoresetService(clock=clock)
+    tr_faulty = Transport(FaultPlan(seed=11, drop=1.0, max_retries=1),
+                          clock=clock)
+
+    svc.register("normal0", task="vrlr", budget=m, seed=0, block_size=256)
+    svc.register("normal1", task="vrlr", budget=m, seed=1, block_size=256)
+    svc.register("greedy", task="vrlr", budget=m, seed=2, block_size=256,
+                 rate_limit=(0.5, 2))
+    svc.register("slow", task="vrlr", budget=m, seed=3, block_size=256)
+    svc.register("faulty", task="vrlr", budget=m, seed=4, block_size=256,
+                 fault_policy="retry", transport=tr_faulty,
+                 breaker_threshold=2, breaker_cooldown_s=60.0)
+
+    streams = {name: _chunk_stream(100 + i, max(num_chunks, greedy_burst),
+                                   rows, d, T)
+               for i, name in enumerate(svc.tenants())}
+
+    issued = succeeded = shed = party_failures = 0
+    lat = {name: [] for name in svc.tenants()}
+    sheds_by = {name: 0 for name in svc.tenants()}
+    t_start = time.time()
+    for r in range(num_chunks):
+        for name in ("normal0", "normal1"):
+            issued += 1
+            rec = svc.insert(name, *streams[name][r])
+            assert isinstance(rec, InsertReceipt), rec
+            succeeded += 1
+            lat[name].append(rec.latency_s)
+        # greedy: a burst per round against a 0.5 req/s budget
+        for b in range(greedy_burst):
+            issued += 1
+            rec = svc.insert("greedy", *streams["greedy"][b])
+            if isinstance(rec, ShedReceipt):
+                shed += 1
+                sheds_by["greedy"] += 1
+                assert rec.reason == "rate_limit", rec
+            else:
+                succeeded += 1
+        # slow: a deadline too tight for even one superchunk boundary
+        issued += 1
+        before = svc.state("slow").tree.num_chunks
+        rec = svc.insert("slow", *streams["slow"][r],
+                         deadline=Deadline.after(clock, 0.005))
+        if isinstance(rec, ShedReceipt):
+            shed += 1
+            sheds_by["slow"] += 1
+            assert rec.reason == "deadline", rec
+            assert svc.state("slow").tree.num_chunks == before, \
+                "deadline shed must roll the tree back"
+        else:
+            succeeded += 1
+        # faulty: every party drops; pre-trip this raises (billed failure),
+        # post-trip it sheds instantly
+        issued += 1
+        try:
+            rec = svc.insert("faulty", *streams["faulty"][r])
+            if isinstance(rec, ShedReceipt):
+                shed += 1
+                sheds_by["faulty"] += 1
+                assert rec.reason == "breaker_open", rec
+            else:
+                succeeded += 1
+        except PartyUnavailable:
+            party_failures += 1
+    wall = time.time() - t_start
+
+    stats = svc.stats()
+    lost = issued - (succeeded + shed + party_failures)
+    if lost != 0:
+        raise AssertionError(
+            f"shed-not-stall violated: {lost} of {issued} requests vanished "
+            f"without a receipt or billed failure")
+    normal_sheds = sheds_by["normal0"] + sheds_by["normal1"]
+    if normal_sheds != 0:
+        raise AssertionError(
+            f"normal tenants were shed {normal_sheds} time(s) — hostile "
+            f"tenants must not starve the rest")
+    if sheds_by["greedy"] == 0:
+        raise AssertionError("the greedy tenant was never rate-limited")
+    if sheds_by["slow"] == 0:
+        raise AssertionError("the slow tenant's deadline never fired")
+    p99_normal = _pct(lat["normal0"] + lat["normal1"], 99)
+    if not p99_normal < P99_GATE_S:
+        raise AssertionError(
+            f"normal-tenant insert p99 {p99_normal:.2f}s breaches the "
+            f"{P99_GATE_S}s bound under the hostile mix")
+
+    entry = {
+        "kind": "hostile_mix", "tenants": len(svc.tenants()),
+        "chunks": num_chunks, "chunk_rows": rows, "m": m,
+        "issued": issued, "succeeded": succeeded, "shed": shed,
+        "party_failures": party_failures,
+        "sheds_by": sheds_by,
+        "normal_p50_ms": round(_pct(lat["normal0"] + lat["normal1"], 50)
+                               * 1e3, 3),
+        "normal_p99_ms": round(p99_normal * 1e3, 3),
+        "requests_per_s": round(issued / wall, 2),
+        "breaker_faulty": stats["breakers"]["faulty"]["state"],
+    }
+    row = {"bench": BENCH, "method": "hostile-mix", "size": issued,
+           "cost_mean": round(p99_normal * 1e3, 3),
+           "cost_std": float(shed), "comm": sum(
+               svc.state(t).ledger.total for t in svc.tenants()),
+           "wall_s": round(wall, 2)}
+    return entry, row
+
+
+# --------------------------------------------------------------------------
+# Experiment 2: breaker isolation — faulty tenant cannot perturb a neighbor
+# --------------------------------------------------------------------------
+
+def _run_normal(svc, stream, m, rounds):
+    for r in range(rounds):
+        rec = svc.insert("victim", *stream[r])
+        assert isinstance(rec, InsertReceipt), rec
+    q = svc.query("victim", reduce_to=m)
+    assert isinstance(q, QueryReceipt)
+    return q
+
+
+def run_breaker_isolation(fast: bool):
+    rounds = 3 if fast else 6
+    rows = 1024 if fast else 8192
+    m, d, T = 64, 6, 3
+    stream = _chunk_stream(7, rounds, rows, d, T)
+    faulty_stream = _chunk_stream(8, rounds, rows, d, T)
+
+    # solo: the victim alone on a fresh service
+    solo = CoresetService(clock=SimClock(tick=0.01))
+    solo.register("victim", task="vrlr", budget=m, seed=0, block_size=256)
+    t0 = time.time()
+    q_solo = _run_normal(solo, stream, m, rounds)
+
+    # shared: same victim + a breaker-tripping faulty tenant interleaved
+    clock = SimClock(tick=0.01)
+    shared = CoresetService(clock=clock)
+    shared.register("victim", task="vrlr", budget=m, seed=0, block_size=256)
+    tr = Transport(FaultPlan(seed=13, drop=1.0, max_retries=1), clock=clock)
+    shared.register("chaos", task="vrlr", budget=m, seed=9, block_size=256,
+                    fault_policy="retry", transport=tr,
+                    breaker_threshold=2, breaker_cooldown_s=1e6)
+    breaker_sheds = 0
+    for r in range(rounds):
+        try:
+            rec = shared.insert("chaos", *faulty_stream[r])
+            if isinstance(rec, ShedReceipt):
+                assert rec.reason == "breaker_open", rec
+                breaker_sheds += 1
+        except PartyUnavailable:
+            pass
+        rec = shared.insert("victim", *stream[r])
+        assert isinstance(rec, InsertReceipt), rec
+    q_shared = shared.query("victim", reduce_to=m)
+    wall = time.time() - t0
+
+    br = shared.stats()["breakers"]["chaos"]
+    if br["trips"] < 1:
+        raise AssertionError(
+            f"the faulty tenant never tripped its breaker: {br}")
+    if breaker_sheds == 0:
+        raise AssertionError(
+            "post-trip requests were not shed with breaker_open receipts")
+    if not (np.array_equal(np.asarray(q_solo.result.indices),
+                           np.asarray(q_shared.result.indices))
+            and np.array_equal(np.asarray(q_solo.result.weights),
+                               np.asarray(q_shared.result.weights))):
+        raise AssertionError(
+            "breaker isolation violated: the victim's query draw changed "
+            "because a faulty tenant shared the service")
+    if q_solo.ledger_total != q_shared.ledger_total:
+        raise AssertionError(
+            f"victim's bill changed under contention: solo "
+            f"{q_solo.ledger_total} vs shared {q_shared.ledger_total}")
+
+    entry = {
+        "kind": "breaker_isolation", "rounds": rounds, "chunk_rows": rows,
+        "m": m, "breaker": br, "breaker_sheds": breaker_sheds,
+        "victim_bill": q_solo.ledger_total, "draw_identical": True,
+    }
+    row = {"bench": BENCH, "method": "breaker-isolation",
+           "size": rounds * rows, "cost_mean": float(br["trips"]),
+           "cost_std": float(breaker_sheds),
+           "comm": q_shared.ledger_total, "wall_s": round(wall, 2)}
+    return entry, row
+
+
+# --------------------------------------------------------------------------
+# Experiment 3: failover draw-identity (the acceptance pin)
+# --------------------------------------------------------------------------
+
+def run_failover_identity(fast: bool):
+    rounds = 2 if fast else 4
+    rows = 1024 if fast else 8192
+    m, d, T = 64, 6, 3
+    stream = _chunk_stream(21, rounds, rows, d, T)
+
+    def play(**extra):
+        svc = CoresetService(clock=SimClock(tick=0.01))
+        svc.register("t", task="vrlr", budget=m, seed=5, block_size=256,
+                     chunk_blocks=2, **extra)
+        recs = [svc.insert("t", *c) for c in stream]
+        q = svc.query("t", reduce_to=m)
+        return svc, recs, q
+
+    t0 = time.time()
+    svc_ok, recs_ok, q_ok = play()
+    # memory_budget_bytes=1 is unsatisfiable: every pipelined leaf build
+    # breaches at its first superchunk probe and falls back to streamed
+    svc_fb, recs_fb, q_fb = play(failover=True, memory_budget_bytes=1)
+    wall = time.time() - t0
+
+    fallbacks = [r.fallback for r in recs_fb]
+    if not all(f == "pipelined->streamed" for f in fallbacks):
+        raise AssertionError(
+            f"expected every leaf build to fall back pipelined->streamed, "
+            f"got {fallbacks}")
+    if any(r.fallback is not None for r in recs_ok):
+        raise AssertionError("the unforced twin must never fall back")
+    if not (np.array_equal(np.asarray(q_ok.result.indices),
+                           np.asarray(q_fb.result.indices))
+            and np.array_equal(np.asarray(q_ok.result.weights),
+                               np.asarray(q_fb.result.weights))):
+        raise AssertionError(
+            "failover draw-identity violated: pipelined->streamed fallback "
+            "changed the query draw")
+    led_ok = svc_ok.state("t").ledger
+    led_fb = svc_fb.state("t").ledger
+    if led_fb.total != led_ok.total:
+        raise AssertionError(
+            f"fallback bill {led_fb.total} != successful-engine bill "
+            f"{led_ok.total} (fallback entries must cost 0 units)")
+    fb_tags = {t: u for t, u in led_fb.by_tag().items()
+               if t.startswith("fallback/")}
+    if len(fb_tags) == 0 or any(u != 0 for u in fb_tags.values()):
+        raise AssertionError(
+            f"expected zero-unit fallback/ attributions, got {fb_tags}")
+
+    entry = {
+        "kind": "failover_identity", "rounds": rounds, "chunk_rows": rows,
+        "m": m, "fallbacks": svc_fb.state("t").tree.fallbacks,
+        "last_fallback": svc_fb.state("t").tree.last_fallback,
+        "bill": led_fb.total, "fallback_tags": sorted(fb_tags),
+        "draw_identical": True,
+    }
+    row = {"bench": BENCH, "method": "failover-identity",
+           "size": rounds * rows,
+           "cost_mean": float(svc_fb.state("t").tree.fallbacks),
+           "cost_std": 0.0, "comm": led_fb.total, "wall_s": round(wall, 2)}
+    return entry, row
+
+
+def run(fast: bool = True):
+    entries, rows = [], []
+    for fn in (run_hostile_mix, run_breaker_isolation, run_failover_identity):
+        e, r = fn(fast)
+        entries.append(e)
+        rows.append(r)
+    write_rows(BENCH, rows)
+    write_bench_json(SECTION, entries)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true", default=True)
+    ap.add_argument("--full", dest="fast", action="store_false")
+    args = ap.parse_args()
+    for r in run(fast=args.fast):
+        print(r)

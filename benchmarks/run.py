@@ -44,6 +44,7 @@ MODULES = [
     "assumption_sweep",  # beyond-paper: Assumption 4.1/5.1 violation sweep
     "chaos",            # fault injection: retry billing + degrade + resume
     "integrity",        # silent corruption: detection + quarantine + overhead
+    "overload",         # hostile tenant mix: shed/breaker/failover gates
 ]
 
 

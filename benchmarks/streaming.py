@@ -42,26 +42,10 @@ import numpy as np
 
 from benchmarks.common import write_bench_json, write_rows
 from repro.core import CommLedger, VFLDataset, build_coreset, build_coreset_streaming
+from repro.core.plan import live_bytes  # productionized census (PR 9)
 
 BENCH = "streaming"
 BENCH_PIPE = "streaming_pipelined"
-
-
-def live_bytes() -> int:
-    """Total bytes of live device arrays right now, deduped by underlying
-    buffer so donated/aliased views (e.g. the prefetcher's staging slots)
-    are counted once, not per jax.Array object."""
-    seen, total = set(), 0
-    for a in jax.live_arrays():
-        try:
-            key = a.unsafe_buffer_pointer()
-        except Exception:
-            key = id(a)
-        if key in seen:
-            continue
-        seen.add(key)
-        total += int(np.prod(a.shape)) * a.dtype.itemsize
-    return total
 
 
 def _host_dataset(n: int, d: int, T: int):

@@ -49,6 +49,8 @@ from repro.core.api import (
     BatchedCoresets,
     CoresetPipeline,
     CoresetTask,
+    FailoverAttempt,
+    FailoverOutcome,
     build_coreset,
     build_coreset_jit,
     build_coreset_streaming,
@@ -60,10 +62,14 @@ from repro.core.api import (
 from repro.core.plan import (
     DEFAULT_CHUNK_BLOCKS,
     ENGINES,
+    FAILOVER_LADDER,
     CoresetSpec,
     ExecutionPlan,
+    MemoryBudgetExceeded,
+    MemoryWatchdog,
     PlanCache,
     compile_plan,
+    live_bytes,
     memory_model,
 )
 from repro.core.solve import (
@@ -80,13 +86,18 @@ from repro.core.comm import CommLedger, CommSchedule, theoretical_dis_cost
 from repro.core.faults import (
     FAULT_POLICIES,
     SILENT_KINDS,
+    Clock,
+    Deadline,
+    DeadlineExceeded,
     DegradedBuild,
     DroppedParty,
     FaultPlan,
     PartyUnavailable,
+    SimClock,
     StreamCheckpoint,
     Transport,
     TransportStats,
+    WallClock,
     deliver_or_record,
     perturb_payload,
 )

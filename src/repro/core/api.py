@@ -47,6 +47,7 @@ from repro.core.comm import CommLedger, CommSchedule
 from repro.core.coreset import Coreset
 from repro.core.dis import _float_dtype, dis_plan_full, split_uploads, uniform_plan
 from repro.core.faults import (
+    DeadlineExceeded,
     DegradedBuild,
     DroppedParty,
     PartyUnavailable,
@@ -66,6 +67,8 @@ from repro.core.plan import (
     SCORE_BACKENDS,
     CoresetSpec,
     ExecutionPlan,
+    MemoryBudgetExceeded,
+    MemoryWatchdog,
     PlanCache,
     compile_plan,
 )
@@ -927,6 +930,151 @@ class CoresetPipeline:
             transport=transport, fault_policy=cspec.fault_policy,
             checkpoint=checkpoint,
         )
+
+    def build_failover(
+        self,
+        spec: CoresetSpec,
+        *,
+        key: jax.Array,
+        ledger: Optional[CommLedger] = None,
+        probe: Optional[Callable[[], None]] = None,
+        transport: Optional[Transport] = None,
+        checkpoint: Optional[StreamCheckpoint] = None,
+        memory_budget_bytes: Optional[int] = None,
+    ) -> "FailoverOutcome":
+        """:meth:`build` with the plan's engine failover ladder armed.
+
+        Runs the compiled plan's engine under a live-bytes
+        :class:`~repro.core.plan.MemoryWatchdog` (when
+        ``memory_budget_bytes`` is given, checked at every superchunk probe
+        and once after the build); a watchdog breach or an engine crash
+        retries once per remaining rung of ``plan.fallback_chain``
+        (materialized -> pipelined -> streamed).  The LAST rung runs
+        without the watchdog — streamed is the minimum-footprint engine,
+        there is nothing left to fall back to.
+
+        Errors that are engine-INDEPENDENT propagate instead of burning
+        ladder rungs: :class:`DeadlineExceeded` (caller's time budget),
+        :class:`PartyUnavailable` / :class:`IntegrityError` (party-side —
+        the circuit breaker's domain, a cheaper engine talks to the same
+        parties), and ``ValueError`` (spec/geometry validation).
+
+        The billing contract the acceptance test pins: each failed attempt
+        is rolled back to a ``ledger.mark()``, then a zero-unit
+        ``fallback/<from>-><to>`` entry attributes the switch — the final
+        total equals the successful engine's bill exactly, plus the tagged
+        zero-cost marker.  The winning plan is returned with the decision
+        appended to ``plan.notes``.
+        """
+        first = self.plan(spec)
+        chain = (first.engine,) + first.fallback_chain
+        watchdog = (None if memory_budget_bytes is None
+                    else MemoryWatchdog(memory_budget_bytes))
+        attempts = []
+        tried = set()
+        ep = first
+        for rung, engine in enumerate(chain):
+            if engine in tried:
+                continue
+            if rung > 0:
+                # recompile on the fallback engine; jit is a
+                # materialized/batched-only flag, never valid on the rungs
+                fb_spec = dataclasses.replace(spec, engine=engine, jit=False)
+                ep = self.plan(fb_spec)
+                if ep.engine in tried:   # pipelined may lower to streamed
+                    continue
+            tried.add(ep.engine)
+            last_rung = (rung == len(chain) - 1) or all(
+                e in tried for e in chain[rung + 1:]
+            )
+            wd = None if (watchdog is None or last_rung) else watchdog
+            eff_probe = _compose_probes(probe, wd)
+            mark = None if ledger is None else ledger.mark()
+            # checkpoints only exist on the streaming engines; the bind
+            # signature changes with the engine's knobs, so reusing one
+            # store across rungs auto-discards the failed rung's state
+            ckpt = (checkpoint if ep.engine in ("streamed", "pipelined")
+                    else None)
+            try:
+                cs = self.build(ep, key=key, ledger=ledger, probe=eff_probe,
+                                transport=transport, checkpoint=ckpt)
+                if wd is not None:
+                    wd.check()   # materialized has no probes; final census
+            except (DeadlineExceeded, PartyUnavailable, IntegrityError,
+                    ValueError):
+                if ledger is not None:
+                    ledger.rollback(mark)
+                raise
+            except Exception as e:
+                if ledger is not None:
+                    ledger.rollback(mark)
+                attempts.append(FailoverAttempt(
+                    engine=ep.engine,
+                    error=f"{type(e).__name__}: {e}",
+                ))
+                if last_rung:
+                    raise
+                continue
+            if attempts:
+                trail = " -> ".join([a.engine for a in attempts]
+                                    + [ep.engine])
+                ep = dataclasses.replace(
+                    ep, notes=ep.notes + (
+                        f"failover: {trail} "
+                        f"({attempts[-1].error})",
+                    ))
+                if ledger is not None:
+                    ledger.send(
+                        f"fallback/{attempts[-1].engine}->{ep.engine}",
+                        "server", "server", 0)
+            return FailoverOutcome(coreset=cs, plan=ep,
+                                   attempts=tuple(attempts))
+        raise RuntimeError("unreachable: failover chain exhausted silently")
+
+
+def _compose_probes(*fns) -> Optional[Callable[[], None]]:
+    """Chain per-superchunk probes (caller's deadline check, the memory
+    watchdog) into one hook; None entries drop out."""
+    live = [f for f in fns if f is not None]
+    if not live:
+        return None
+    if len(live) == 1:
+        return live[0]
+
+    def probe() -> None:
+        for f in live:
+            f()
+    return probe
+
+
+@dataclasses.dataclass(frozen=True)
+class FailoverAttempt:
+    """One failed rung of the ladder: which engine, what killed it."""
+
+    engine: str
+    error: str
+
+
+@dataclasses.dataclass(frozen=True)
+class FailoverOutcome:
+    """Result of :meth:`CoresetPipeline.build_failover`: the coreset, the
+    plan that produced it (with any failover note appended), and the failed
+    attempts in ladder order (empty when the first engine succeeded)."""
+
+    coreset: Coreset
+    plan: ExecutionPlan
+    attempts: Tuple[FailoverAttempt, ...] = ()
+
+    @property
+    def engine(self) -> str:
+        return self.plan.engine
+
+    @property
+    def fallback(self) -> Optional[str]:
+        """``"<first-failed>-><winner>"`` when the ladder fired, else None."""
+        if not self.attempts:
+            return None
+        return f"{self.attempts[0].engine}->{self.plan.engine}"
 
 
 # --------------------------------------------------------------------------

@@ -58,6 +58,122 @@ from repro.core.integrity import WireEnvelope
 
 FAULT_POLICIES = ("fail", "retry", "degrade", "quarantine")
 
+
+# --------------------------------------------------------------------------
+# The time seam: one Clock shared by deadlines and the fault plan's
+# simulated delays, so "a slow party eats the request's time budget" is a
+# single consistent statement in both real and simulated time.
+# --------------------------------------------------------------------------
+
+class Clock:
+    """Abstract monotonic time source.
+
+    :class:`WallClock` reads the process monotonic clock (``advance`` is a
+    no-op: real time passes on its own; simulated fault delays are *never*
+    slept, only accounted).  :class:`SimClock` is fully simulated — a
+    :class:`Transport` bound to it pushes its fault delays and backoffs
+    into the same timeline deadline checks read, so chaos tests exercise
+    deadline pressure deterministically at full speed.
+    """
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def advance(self, dt: float) -> None:
+        raise NotImplementedError
+
+
+class WallClock(Clock):
+    """Real monotonic time.  ``advance`` is deliberately a no-op — wall
+    time cannot be pushed forward, and simulated transport delays must not
+    turn into real sleeps."""
+
+    def now(self) -> float:
+        import time
+
+        return time.monotonic()
+
+    def advance(self, dt: float) -> None:
+        return None
+
+
+class SimClock(Clock):
+    """Deterministic simulated time.
+
+    ``tick`` (default 0) is the auto-advance per :meth:`now` read — each
+    observation of the clock models one unit of elapsed work, which is what
+    makes deadline-at-a-superchunk-boundary tests exact: the k-th boundary
+    check happens at precisely ``start + k * tick``.  ``advance`` adds
+    simulated delay explicitly (the :class:`Transport` seam calls it for
+    fault delays and retry backoffs when bound to this clock).
+    """
+
+    def __init__(self, start: float = 0.0, tick: float = 0.0) -> None:
+        if not tick >= 0:
+            raise ValueError(f"tick must be >= 0, got {tick!r}")
+        self._t = float(start)
+        self.tick = float(tick)
+
+    def now(self) -> float:
+        t = self._t
+        self._t += self.tick
+        return t
+
+    def advance(self, dt: float) -> None:
+        if not dt >= 0:
+            raise ValueError(f"cannot advance time backwards (dt={dt!r})")
+        self._t += float(dt)
+
+    def peek(self) -> float:
+        """The current time WITHOUT consuming an auto-tick."""
+        return self._t
+
+
+class DeadlineExceeded(RuntimeError):
+    """An operation ran past its deadline.  Raised at a checkpoint
+    boundary (superchunk probes, service admission) — never mid-kernel —
+    so the state it interrupts is always rollback-safe."""
+
+    def __init__(self, op: str, at: float, now: float) -> None:
+        super().__init__(
+            f"{op}: deadline {at:.6g} exceeded at t={now:.6g} "
+            f"(over by {now - at:.6g}s)"
+        )
+        self.op = op
+        self.at = float(at)
+        self.now = float(now)
+
+
+@dataclasses.dataclass(frozen=True)
+class Deadline:
+    """An absolute point on a :class:`Clock` by which an operation must
+    finish.  ``expired`` uses >= — a deadline landing EXACTLY on a check
+    boundary counts as missed (pinned by the edge-case tests), so budget 0
+    always sheds at admission.
+    """
+
+    at: float
+    budget_s: float = 0.0        # the original relative budget, for receipts
+
+    @staticmethod
+    def after(clock: Clock, budget_s: float) -> "Deadline":
+        if not budget_s >= 0:
+            raise ValueError(f"deadline budget must be >= 0, got {budget_s!r}")
+        return Deadline(at=clock.now() + float(budget_s),
+                        budget_s=float(budget_s))
+
+    def expired(self, clock: Clock) -> bool:
+        return clock.now() >= self.at
+
+    def remaining(self, clock: Clock) -> float:
+        return self.at - clock.now()
+
+    def check(self, clock: Clock, op: str) -> None:
+        """Raise :exc:`DeadlineExceeded` if the deadline has passed."""
+        now = clock.now()
+        if now >= self.at:
+            raise DeadlineExceeded(op, self.at, now)
+
 #: Silent-corruption flavors: whole-payload sign flip, whole-payload scale
 #: inflation, and a single seeded NaN injection.
 SILENT_KINDS = ("sign", "scale", "nan")
@@ -413,12 +529,21 @@ class Transport:
     """
 
     def __init__(self, plan: Optional[FaultPlan] = None, *,
-                 verify: bool = True) -> None:
+                 verify: bool = True, clock: Optional[Clock] = None) -> None:
         self.plan = plan if plan is not None else FaultPlan.none()
         self.stats = TransportStats()
         # verify=False models an undefended receiver: silently corrupted
         # payloads shipped through this transport are DELIVERED as-is
         self.verify = bool(verify)
+        # clock binding: simulated delays/backoffs ADVANCE this clock in
+        # addition to accruing in stats.sim_time_s, so deadline checks and
+        # fault latency share one timeline (a no-op on WallClock)
+        self.clock = clock
+
+    def _accrue(self, dt: float) -> None:
+        self.stats.sim_time_s += dt
+        if self.clock is not None and dt:
+            self.clock.advance(dt)
 
     def deliver(
         self,
@@ -449,7 +574,7 @@ class Transport:
                 ev = plan.decide(op.tag, op.party, attempts)
                 attempts += 1
                 stats.attempts += 1
-                stats.sim_time_s += ev.delay_s
+                self._accrue(ev.delay_s)
                 if ev.ok:
                     if ledger is not None:
                         if op.down:
@@ -482,7 +607,7 @@ class Transport:
                     raise PartyUnavailable(op.party, op.tag, attempts)
                 retries += 1
                 stats.retries += 1
-                stats.sim_time_s += plan.backoff_s(attempts)
+                self._accrue(plan.backoff_s(attempts))
         return DeliveryReport(
             units_base=units_base, units_retried=units_retried,
             retries=retries, failed=failed,
@@ -563,7 +688,7 @@ class Transport:
                         break
                     raise PartyUnavailable(j, tag, attempts)
                 stats.retries += 1
-                stats.sim_time_s += plan.backoff_s(attempts)
+                self._accrue(plan.backoff_s(attempts))
         return delivered, failed
 
 

@@ -41,6 +41,7 @@ module stays import-light so the spec can be constructed anywhere.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Mapping, Optional, Tuple, Union
 
 import numpy as np
@@ -51,6 +52,11 @@ from repro.core.vfl import VFLDataset, block_geometry
 SCORE_BACKENDS = ("pallas", "ref", "norm")
 
 ENGINES = ("materialized", "batched", "streamed", "pipelined")
+
+#: Failover order, most capable to minimum footprint.  A build that crashes
+#: or breaches its runtime memory budget retries on the next engine in this
+#: ladder (pipelined -> streamed is bit-identical by the PR 4 contract).
+FAILOVER_LADDER = ("materialized", "pipelined", "streamed")
 
 FAULT_POLICIES = ("fail", "retry", "degrade", "quarantine")
 
@@ -267,6 +273,77 @@ def _fmt_bytes(b: int) -> str:
 
 
 # --------------------------------------------------------------------------
+# Runtime memory watchdog — the benchmarks/streaming.py dedup census,
+# productionized: the planner PREDICTS peaks from the calibrated model, the
+# watchdog MEASURES them, and the failover ladder reacts when the model was
+# wrong (ROADMAP item 2 shows it already is on CPU).
+# --------------------------------------------------------------------------
+
+def live_bytes() -> int:
+    """Total bytes of live device arrays right now, deduped by underlying
+    buffer so donated/aliased views (e.g. the pipelined engine's staging
+    slots) count once, not per ``jax.Array`` object.  Process-wide: in a
+    multi-tenant service this measures the whole device residency, which is
+    exactly the number an OOM cares about."""
+    import jax
+
+    seen, total = set(), 0
+    for a in jax.live_arrays():
+        try:
+            key = a.unsafe_buffer_pointer()
+        except Exception:
+            key = id(a)
+        if key in seen:
+            continue
+        seen.add(key)
+        total += int(np.prod(a.shape)) * a.dtype.itemsize
+    return total
+
+
+class MemoryBudgetExceeded(RuntimeError):
+    """The live-bytes census breached the build's ``memory_budget_bytes``.
+
+    Raised by :class:`MemoryWatchdog` at a probe boundary (between
+    superchunk dispatches / after a build) — the failover ladder catches it
+    and retries on the next-cheaper engine."""
+
+    def __init__(self, observed: int, budget: int) -> None:
+        super().__init__(
+            f"live device bytes {observed} exceed memory_budget_bytes="
+            f"{budget} ({_fmt_bytes(observed)} > {_fmt_bytes(budget)})"
+        )
+        self.observed = int(observed)
+        self.budget = int(budget)
+
+
+class MemoryWatchdog:
+    """Runtime guard: compare the live-bytes census against a budget at
+    every check.  Callable, so it plugs directly into the streaming
+    engines' per-superchunk ``probe`` hook; ``peak``/``checks`` are the
+    census the receipts and benchmarks read back."""
+
+    def __init__(self, budget_bytes: int) -> None:
+        if not _is_int(budget_bytes) or budget_bytes < 1:
+            raise ValueError(
+                f"budget_bytes must be a positive int, got {budget_bytes!r}"
+            )
+        self.budget_bytes = int(budget_bytes)
+        self.checks = 0
+        self.peak = 0
+
+    def check(self) -> int:
+        b = live_bytes()
+        self.checks += 1
+        if b > self.peak:
+            self.peak = b
+        if b > self.budget_bytes:
+            raise MemoryBudgetExceeded(b, self.budget_bytes)
+        return b
+
+    __call__ = check
+
+
+# --------------------------------------------------------------------------
 # ExecutionPlan
 # --------------------------------------------------------------------------
 
@@ -303,6 +380,15 @@ class ExecutionPlan:
     predicted_comm_units: int
     budget_exceeded: bool = False
     notes: Tuple[str, ...] = ()
+    #: Ordered engines to retry on if this plan's engine crashes or breaches
+    #: its runtime memory budget — the cheaper tail of the failover ladder
+    #: materialized -> pipelined -> streamed.  Empty for batched (grid
+    #: semantics don't failover) and for streamed (already the
+    #: minimum-footprint engine).  PR 5's executor contract makes
+    #: pipelined -> streamed draw-identical; materialized -> pipelined
+    #: switches to the streaming draw path (each engine's own canonical
+    #: draw, same Thm 2.5 guarantee).
+    fallback_chain: Tuple[str, ...] = ()
 
     @property
     def is_grid(self) -> bool:
@@ -409,7 +495,8 @@ class PlanCache:
 
     DEFAULT_MAX_ENTRIES = 256
 
-    def __init__(self, max_entries: Optional[int] = None) -> None:
+    def __init__(self, max_entries: Optional[int] = None, *,
+                 time_fn=None) -> None:
         from collections import OrderedDict
 
         if max_entries is None:
@@ -420,6 +507,11 @@ class PlanCache:
             )
         self.max_entries = int(max_entries)
         self._plans: "OrderedDict[tuple, ExecutionPlan]" = OrderedDict()
+        # last_used ages entries so a long-lived service can shed stale
+        # shape signatures (prune) instead of waiting for LRU pressure;
+        # time_fn is injectable for deterministic aging tests.
+        self._time_fn = time.monotonic if time_fn is None else time_fn
+        self._last_used: dict = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -441,11 +533,13 @@ class PlanCache:
             plan = compile_plan(spec, ds)
             self._plans[k] = plan
             if len(self._plans) > self.max_entries:
-                self._plans.popitem(last=False)      # least recently used
+                old, _ = self._plans.popitem(last=False)  # least recently used
+                self._last_used.pop(old, None)
                 self.evictions += 1
         else:
             self.hits += 1
             self._plans.move_to_end(k)
+        self._last_used[k] = self._time_fn()
         return plan
 
     def __len__(self) -> int:
@@ -453,14 +547,37 @@ class PlanCache:
 
     def clear(self) -> None:
         self._plans.clear()
+        self._last_used.clear()
+
+    def prune(self, max_idle_s: float) -> int:
+        """Evict every entry unused for more than ``max_idle_s`` seconds.
+        Returns the number evicted (also added to ``evictions``).  Cheap to
+        call periodically — correctness is unaffected; a pruned plan just
+        recompiles on its next miss."""
+        if not (isinstance(max_idle_s, (int, float)) and max_idle_s >= 0):
+            raise ValueError(
+                f"max_idle_s must be a non-negative number, got {max_idle_s!r}"
+            )
+        now = self._time_fn()
+        stale = [k for k, t in self._last_used.items()
+                 if now - t > max_idle_s]
+        for k in stale:
+            self._plans.pop(k, None)
+            self._last_used.pop(k, None)
+        self.evictions += len(stale)
+        return len(stale)
 
     def stats(self) -> dict:
+        now = self._time_fn()
+        ages = [now - t for t in self._last_used.values()]
         return {
             "size": len(self._plans),
             "max_entries": self.max_entries,
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "oldest_idle_s": max(ages) if ages else 0.0,
+            "newest_idle_s": min(ages) if ages else 0.0,
         }
 
 
@@ -613,6 +730,14 @@ def compile_plan(spec: CoresetSpec, ds: VFLDataset) -> ExecutionPlan:
 
     comm = R * sum(_cell_comm(T, m, uniform) for m in spec.budgets)
 
+    # failover ladder: the cheaper engines after the chosen one.  jit and
+    # sharded_masses bind the spec to specific engines (validated above), so
+    # those plans pin their engine and never failover.
+    if engine in FAILOVER_LADDER and not spec.jit and not spec.sharded_masses:
+        fallback = FAILOVER_LADDER[FAILOVER_LADDER.index(engine) + 1:]
+    else:
+        fallback = ()
+
     return ExecutionPlan(
         spec=spec,
         engine=engine,
@@ -626,4 +751,5 @@ def compile_plan(spec: CoresetSpec, ds: VFLDataset) -> ExecutionPlan:
         predicted_comm_units=comm,
         budget_exceeded=budget_exceeded,
         notes=tuple(notes),
+        fallback_chain=fallback,
     )

@@ -5,6 +5,9 @@
     leaves, weighted-union DIS merges, exact composed ledger).
   * :mod:`repro.serve.service` — :class:`CoresetService`: many tenants,
     one shared plan cache, cross-tenant batching of one-shot builds.
+  * :mod:`repro.serve.resilience` — admission control and failure
+    isolation: :class:`TokenBucket`, :class:`CircuitBreaker`, and the
+    :class:`ShedReceipt` every refused request returns.
 
 (The seed's language-model ``ServeEngine`` now lives in
 :mod:`repro.models.lm_serve`; it is re-exported here — deprecated — so old
@@ -12,6 +15,7 @@ imports keep working.)
 """
 
 from repro.models.lm_serve import ServeEngine, make_serve_step   # deprecated
+from repro.serve.resilience import CircuitBreaker, ShedReceipt, TokenBucket
 from repro.serve.service import (
     CoresetService,
     EvictReceipt,
@@ -31,6 +35,9 @@ __all__ = [
     "InsertReceipt",
     "QueryReceipt",
     "EvictReceipt",
+    "ShedReceipt",
+    "TokenBucket",
+    "CircuitBreaker",
     # deprecated LM re-exports
     "ServeEngine",
     "make_serve_step",

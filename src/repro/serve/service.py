@@ -24,6 +24,15 @@ each).  Three things make it a SERVICE rather than a loop over
 
 All receipts carry wall latency and the tenant's ledger total so the
 harness can report p50/p99 and verify composed accounting externally.
+
+The service is additionally OVERLOAD-SAFE (PR 9): every operation passes
+an admission gate (deadline, global in-flight cap, per-tenant token
+bucket, per-tenant circuit breaker — see :mod:`repro.serve.resilience`)
+and refusals return :class:`~repro.serve.resilience.ShedReceipt` instead
+of raising or silently dropping.  Deadline-pressed queries degrade to the
+un-reduced tree union; leaf builds can arm the engine failover ladder
+(``failover=True`` + ``memory_budget_bytes``).  The invariant the overload
+benchmark asserts: no request is ever lost without a receipt.
 """
 
 from __future__ import annotations
@@ -38,9 +47,19 @@ import numpy as np
 from repro.core.api import CoresetTask, build_coresets_batched, get_task
 from repro.core.comm import CommLedger
 from repro.core.coreset import Coreset, MaterializedCoreset
-from repro.core.faults import StreamCheckpoint, Transport
+from repro.core.faults import (
+    Clock,
+    Deadline,
+    DeadlineExceeded,
+    PartyUnavailable,
+    StreamCheckpoint,
+    Transport,
+    WallClock,
+)
+from repro.core.integrity import IntegrityError
 from repro.core.plan import PlanCache
 from repro.core.vfl import VFLDataset
+from repro.serve.resilience import CircuitBreaker, ShedReceipt, TokenBucket
 from repro.serve.tree import CoresetTree, InsertStats
 
 
@@ -52,6 +71,9 @@ class InsertReceipt:
     ledger_total: int           # tenant's composed comm bill after the insert
     plan_hit: bool              # leaf build reused a cached ExecutionPlan
     latency_s: float
+    #: engine failover trail of the leaf build ("pipelined->streamed"), or
+    #: None when the planned engine succeeded
+    fallback: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +83,13 @@ class QueryReceipt:
     m: int
     ledger_total: int
     latency_s: float
+    #: True when a deadline-pressed query returned the current tree union
+    #: WITHOUT the requested final reduce_to pass (still a valid coreset —
+    #: just larger than asked)
+    degraded: bool = False
+    #: comm units this query added to the tenant's ledger (the reduce's
+    #: bill; 0 for union/degraded queries)
+    comm_delta: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +98,8 @@ class EvictReceipt:
     chunks: int
     rows: int
     ledger_total: int           # final composed bill at eviction
+    #: the tenant's not-yet-flushed submit requests dropped at evict time
+    dropped_pending: int = 0
 
 
 @dataclasses.dataclass
@@ -79,6 +110,10 @@ class TenantState:
     tree: CoresetTree
     inserts: int = 0
     queries: int = 0
+    bucket: Optional[TokenBucket] = None
+    breaker: Optional[CircuitBreaker] = None
+    max_pending: Optional[int] = None
+    sheds: int = 0
 
     @property
     def ledger(self) -> CommLedger:
@@ -108,9 +143,23 @@ class CoresetService:
     """
 
     def __init__(self, *, backend: str = "auto",
-                 plan_cache: Optional[PlanCache] = None) -> None:
+                 plan_cache: Optional[PlanCache] = None,
+                 clock: Optional[Clock] = None,
+                 max_inflight: Optional[int] = None) -> None:
         self.backend = backend
         self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
+        # the service's time seam: deadlines, token buckets, and breaker
+        # cooldowns all read THIS clock — hand it a SimClock (ideally the
+        # same one the tenants' Transports advance) and the whole resilience
+        # layer becomes deterministic
+        self.clock = clock if clock is not None else WallClock()
+        if max_inflight is not None and (not isinstance(max_inflight, int)
+                                         or max_inflight < 1):
+            raise ValueError(
+                f"max_inflight must be a positive int, got {max_inflight!r}"
+            )
+        self.max_inflight = max_inflight
+        self._inflight = 0
         self._tenants: Dict[str, TenantState] = {}
         self._datasets: Dict[str, VFLDataset] = {}
         self._pending: List[_BuildRequest] = []
@@ -135,6 +184,12 @@ class CoresetService:
         fault_policy: str = "fail",
         transport: Optional[Transport] = None,
         checkpoint: bool = False,
+        rate_limit: Optional[Tuple[float, float]] = None,
+        max_pending: Optional[int] = None,
+        breaker_threshold: int = 3,
+        breaker_cooldown_s: float = 30.0,
+        memory_budget_bytes: Optional[int] = None,
+        failover: bool = False,
         **params: Any,
     ) -> TenantState:
         """Create a tenant: its tree, ledger, and key chain.  Deterministic —
@@ -147,6 +202,15 @@ class CoresetService:
         crashes mid-build (and is rolled back by the tree) RESUMES its scan
         passes at the last completed superchunk when the chunk is retried —
         draw-identical to a never-failed insert.
+
+        Resilience knobs (all default permissive, so a tenant without them
+        behaves exactly as before): ``rate_limit=(rate_per_s, burst)`` arms
+        a token bucket on the service clock; ``max_pending`` bounds the
+        tenant's un-flushed ``submit`` queue; ``breaker_threshold`` /
+        ``breaker_cooldown_s`` tune the circuit breaker (consecutive
+        party-side failures open it); ``memory_budget_bytes`` +
+        ``failover=True`` arm the leaf builds' engine failover ladder with
+        the live-bytes watchdog.
         """
         if tenant in self._tenants:
             raise ValueError(f"tenant {tenant!r} already registered")
@@ -159,10 +223,47 @@ class CoresetService:
             headroom=headroom, fault_policy=fault_policy,
             transport=transport,
             checkpoint=StreamCheckpoint() if checkpoint else None,
+            memory_budget_bytes=memory_budget_bytes, failover=failover,
         )
-        state = TenantState(name=tenant, tree=tree)
+        state = TenantState(
+            name=tenant, tree=tree,
+            bucket=None if rate_limit is None else TokenBucket(*rate_limit),
+            breaker=CircuitBreaker(threshold=breaker_threshold,
+                                   cooldown_s=breaker_cooldown_s),
+            max_pending=max_pending,
+        )
         self._tenants[tenant] = state
         return state
+
+    # -- admission control ---------------------------------------------------
+
+    def _admit(self, st: TenantState, op: str,
+               deadline: Optional[Deadline]) -> Optional[ShedReceipt]:
+        """The admission gate, cheapest check first: an already-expired
+        deadline sheds before ANY state is touched (not even a token is
+        spent); then the global in-flight cap, the tenant's token bucket,
+        and LAST the circuit breaker — last because an open->half-open
+        transition admits a probe, so nothing may shed the request after
+        the breaker says yes."""
+        if deadline is not None and deadline.expired(self.clock):
+            st.sheds += 1
+            return ShedReceipt(tenant=st.name, op=op, reason="deadline")
+        if (self.max_inflight is not None
+                and self._inflight >= self.max_inflight):
+            st.sheds += 1
+            return ShedReceipt(tenant=st.name, op=op, reason="overloaded")
+        if st.bucket is not None:
+            ok, retry = st.bucket.try_take(self.clock.now())
+            if not ok:
+                st.sheds += 1
+                return ShedReceipt(tenant=st.name, op=op,
+                                   reason="rate_limit", retry_after_s=retry)
+        ok, retry = st.breaker.allow(self.clock.now())
+        if not ok:
+            st.sheds += 1
+            return ShedReceipt(tenant=st.name, op=op,
+                               reason="breaker_open", retry_after_s=retry)
+        return None
 
     def tenants(self) -> List[str]:
         return sorted(self._tenants)
@@ -177,21 +278,40 @@ class CoresetService:
     def evict(self, tenant: str) -> EvictReceipt:
         st = self.state(tenant)
         del self._tenants[tenant]
+        # drop the tenant's not-yet-flushed submits: flushing work for an
+        # evicted tenant would burn a batched-grid slot nobody redeems
+        dropped = sum(1 for r in self._pending if r.tenant == tenant)
+        if dropped:
+            self._pending = [r for r in self._pending if r.tenant != tenant]
         return EvictReceipt(tenant=tenant, chunks=st.tree.num_chunks,
                             rows=st.tree.n_total,
-                            ledger_total=st.ledger.total)
+                            ledger_total=st.ledger.total,
+                            dropped_pending=dropped)
 
     # -- streaming path ------------------------------------------------------
 
     def insert(self, tenant: str, parts: Sequence[Any],
-               y: Optional[Any] = None) -> InsertReceipt:
+               y: Optional[Any] = None, *,
+               deadline: Optional[Deadline] = None,
+               ) -> Union[InsertReceipt, ShedReceipt]:
         """Absorb one superchunk into the tenant's tree.
 
         Validates the chunk at the service edge — a malformed request fails
         with a clear error BEFORE any tree state is touched (the tree's own
         insert is additionally crash-safe: a failure mid-build rolls back).
+
+        ``deadline`` (a :class:`~repro.core.faults.Deadline` on the service
+        clock) is checked at admission — already expired sheds with zero
+        work — and at every superchunk boundary of the leaf build; a
+        mid-build breach rolls the tree back and returns a
+        :class:`ShedReceipt` (reason ``"deadline"``), never a half-applied
+        insert.  Party-side failures feed the tenant's circuit breaker and
+        re-raise.
         """
         st = self.state(tenant)
+        t0 = time.perf_counter()
+        # pure request validation first — a malformed request costs the
+        # tenant nothing (no token, no breaker probe)
         parts = list(parts)
         if not parts:
             raise ValueError(
@@ -210,26 +330,89 @@ class CoresetService:
                 f"chunk's row count ({rows}); every party must slice the "
                 f"same rows"
             )
+        shed = self._admit(st, "insert", deadline)
+        if shed is not None:
+            return shed
+        probe = (None if deadline is None
+                 else lambda: deadline.check(self.clock, f"insert/{tenant}"))
         hits0 = self.plan_cache.hits
-        t0 = time.perf_counter()
-        stats = st.tree.insert(parts, y)
-        dt = time.perf_counter() - t0
+        self._inflight += 1
+        try:
+            stats = st.tree.insert(parts, y, probe=probe)
+        except DeadlineExceeded:
+            # the tree rolled itself back; the breaker learns nothing about
+            # party health from a time-budget abort
+            st.breaker.record_neutral(self.clock.now())
+            st.sheds += 1
+            return ShedReceipt(tenant=tenant, op="insert", reason="deadline",
+                               latency_s=time.perf_counter() - t0)
+        except (PartyUnavailable, IntegrityError) as e:
+            st.breaker.record_failure(self.clock.now(),
+                                      f"{type(e).__name__}: {e}")
+            raise
+        except BaseException:
+            # not a party-side failure: a half-open probe must not stay
+            # dangling, but this says nothing about party health either
+            st.breaker.record_neutral(self.clock.now())
+            raise
+        finally:
+            self._inflight -= 1
+        st.breaker.record_success()
         st.inserts += 1
         return InsertReceipt(
             tenant=tenant, chunk_idx=st.tree.num_chunks - 1, stats=stats,
             ledger_total=st.ledger.total,
-            plan_hit=self.plan_cache.hits > hits0, latency_s=dt,
+            plan_hit=self.plan_cache.hits > hits0,
+            latency_s=time.perf_counter() - t0,
+            fallback=stats.fallback,
         )
 
     def query(self, tenant: str, *, reduce_to: Optional[int] = None,
-              key: Optional[jax.Array] = None) -> QueryReceipt:
+              key: Optional[jax.Array] = None,
+              deadline: Optional[Deadline] = None,
+              ) -> Union[QueryReceipt, ShedReceipt]:
+        """The tenant's current stream summary.
+
+        With a ``deadline``: already expired at admission sheds; expired by
+        the time the final ``reduce_to`` pass would run DEGRADES instead —
+        the receipt carries the current tree union (a valid coreset, just
+        larger than requested) with ``degraded=True`` and no reduce bill.
+        """
         st = self.state(tenant)
         t0 = time.perf_counter()
-        result = st.tree.query(reduce_to=reduce_to, key=key)
-        dt = time.perf_counter() - t0
+        shed = self._admit(st, "query", deadline)
+        if shed is not None:
+            return shed
+        led0 = st.ledger.total
+        mark = st.ledger.mark()
+        degraded = False
+        self._inflight += 1
+        try:
+            if (reduce_to is not None and deadline is not None
+                    and deadline.expired(self.clock)):
+                # no time left for the reduce pass: serve what we have
+                result = st.tree.query(reduce_to=None)
+                degraded = True
+            else:
+                result = st.tree.query(reduce_to=reduce_to, key=key)
+        except (PartyUnavailable, IntegrityError) as e:
+            st.ledger.rollback(mark)
+            st.breaker.record_failure(self.clock.now(),
+                                      f"{type(e).__name__}: {e}")
+            raise
+        except BaseException:
+            st.ledger.rollback(mark)
+            st.breaker.record_neutral(self.clock.now())
+            raise
+        finally:
+            self._inflight -= 1
+        st.breaker.record_success()
         st.queries += 1
         return QueryReceipt(tenant=tenant, result=result, m=result.m,
-                            ledger_total=st.ledger.total, latency_s=dt)
+                            ledger_total=st.ledger.total,
+                            latency_s=time.perf_counter() - t0,
+                            degraded=degraded,
+                            comm_delta=st.ledger.total - led0)
 
     # -- cross-tenant batched builds -----------------------------------------
 
@@ -248,16 +431,28 @@ class CoresetService:
         key: jax.Array,
         task: Union[str, CoresetTask] = "vrlr",
         **params: Any,
-    ) -> int:
+    ) -> Union[int, ShedReceipt]:
         """Queue a one-shot build; returns a ticket redeemed by ``flush``.
 
         The draw is a pure function of (dataset, task, params, m, key) —
         batching with other tenants' requests cannot change it (the batched
         engine vmaps over the key axis; pinned in the tests).
+
+        A registered tenant with ``max_pending`` set is bounded: submits
+        past the cap return a :class:`ShedReceipt` (reason
+        ``"queue_full"``) instead of a ticket, so one tenant cannot grow
+        the flush queue without limit.
         """
         if dataset not in self._datasets:
             raise KeyError(f"dataset {dataset!r} not attached; "
                            f"have: {sorted(self._datasets)}")
+        st = self._tenants.get(tenant)
+        if st is not None and st.max_pending is not None:
+            depth = sum(1 for r in self._pending if r.tenant == tenant)
+            if depth >= st.max_pending:
+                st.sheds += 1
+                return ShedReceipt(tenant=tenant, op="submit",
+                                   reason="queue_full")
         ticket = self._next_ticket
         self._next_ticket += 1
         self._pending.append(_BuildRequest(
@@ -271,7 +466,7 @@ class CoresetService:
     def pending(self) -> int:
         return len(self._pending)
 
-    def flush(self) -> Dict[int, Coreset]:
+    def flush(self, *, deadline: Optional[Deadline] = None) -> Dict[int, Coreset]:
         """Execute all pending requests; ONE batched-engine dispatch per
         compatible ``(dataset, task, params)`` group.
 
@@ -279,6 +474,10 @@ class CoresetService:
         union of requested budgets as the grid; request r's result is cell
         ``(r, ms.index(m_r))``.  Every cell still pays its own exact comm
         schedule on the submitting tenant's ledger (if that tenant has one).
+
+        ``deadline`` is checked between group dispatches: groups there was
+        no time to start go BACK to the pending queue (tickets intact, no
+        partial groups) and are executed by the next flush.
         """
         pending, self._pending = self._pending, []
         groups: Dict[Tuple[str, str, Tuple], List[_BuildRequest]] = {}
@@ -287,7 +486,13 @@ class CoresetService:
                               []).append(req)
 
         out: Dict[int, Coreset] = {}
-        for (ds_name, task, params), reqs in groups.items():
+        for gi, ((ds_name, task, params), reqs) in enumerate(groups.items()):
+            if deadline is not None and deadline.expired(self.clock):
+                # out of budget: requeue every unstarted group atomically
+                deferred = [r for (_, rs) in list(groups.items())[gi:]
+                            for r in rs]
+                self._pending = deferred + self._pending
+                break
             ds = self._datasets[ds_name]
             ms = tuple(sorted({r.m for r in reqs}))
             keys = jax.numpy.stack([r.key for r in reqs])
@@ -302,6 +507,16 @@ class CoresetService:
                                                ledger=ledger)
         return out
 
+    # -- plan-cache maintenance ----------------------------------------------
+
+    def prune_plans(self, max_idle_s: float) -> int:
+        """Evict plans unused for ``max_idle_s`` seconds (see
+        :meth:`PlanCache.prune`); returns the count evicted."""
+        return self.plan_cache.prune(max_idle_s)
+
+    def clear_plans(self) -> None:
+        self.plan_cache.clear()
+
     # -- introspection -------------------------------------------------------
 
     def stats(self) -> Dict[str, Any]:
@@ -313,13 +528,20 @@ class CoresetService:
             "plan_hits": pc["hits"],
             "plan_misses": pc["misses"],
             "plan_evictions": pc["evictions"],
+            "plan_oldest_idle_s": pc["oldest_idle_s"],
             "batched_flushes": self.batched_flushes,
             "batched_cells": self.batched_cells,
             "pending": len(self._pending),
+            "inflight": self._inflight,
             "health_checks": sum(st.tree.health_checks
                                  for st in self._tenants.values()),
             "health_warnings": sum(st.tree.health_warnings
                                    for st in self._tenants.values()),
+            "sheds": sum(st.sheds for st in self._tenants.values()),
+            "fallbacks": sum(st.tree.fallbacks
+                             for st in self._tenants.values()),
+            "breakers": {name: st.breaker.stats()
+                         for name, st in sorted(self._tenants.items())},
         }
 
     def describe(self) -> str:
@@ -334,9 +556,17 @@ class CoresetService:
         for name in self.tenants():
             st = self._tenants[name]
             t = st.tree
+            extra = ""
+            if st.breaker.state != "closed" or st.breaker.trips:
+                extra += (f" breaker={st.breaker.state}"
+                          f"({st.breaker.trips} trip(s))")
+            if st.sheds:
+                extra += f" sheds={st.sheds}"
+            if t.fallbacks:
+                extra += f" fallbacks={t.fallbacks}({t.last_fallback})"
             lines.append(
                 f"  {name}: task={t.task.name} budget={t.budget} "
                 f"chunks={t.num_chunks} rows={t.n_total} height={t.height} "
-                f"comm={st.ledger.total}"
+                f"comm={st.ledger.total}{extra}"
             )
         return "\n".join(lines)

@@ -176,6 +176,9 @@ class InsertStats:
     comm_delta: int
     height_after: int
     latency_s: float
+    #: ``"<failed-engine>-><winner>"`` when the leaf build's failover
+    #: ladder fired (tree constructed with ``failover=True``), else None.
+    fallback: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -232,6 +235,8 @@ class CoresetTree:
         fault_policy: str = "fail",
         transport: Optional[Transport] = None,
         checkpoint: Optional[StreamCheckpoint] = None,
+        memory_budget_bytes: Optional[int] = None,
+        failover: bool = False,
     ) -> None:
         self.task = get_task(task)
         self.budget = int(budget)
@@ -251,6 +256,15 @@ class CoresetTree:
         self.fault_policy = str(fault_policy)
         self.transport = transport
         self.checkpoint = checkpoint
+        # engine failover for LEAF builds: a leaf that crashes or breaches
+        # memory_budget_bytes retries down the plan's fallback chain
+        # (pipelined -> streamed, draw-identical).  Merges never failover —
+        # they run dis_plan_full over tiny materialized unions, not an
+        # engine.
+        self.memory_budget_bytes = memory_budget_bytes
+        self.failover = bool(failover)
+        self.fallbacks = 0
+        self.last_fallback: Optional[str] = None
         self.ledger = ledger if ledger is not None else CommLedger()
         self.levels: List[Optional[TreeNode]] = []
         self.num_chunks = 0
@@ -304,11 +318,13 @@ class CoresetTree:
         counters, and a ledger rollback mark."""
         return (list(self.levels), self.num_chunks, self.n_total,
                 self._merge_ops, self.health_checks, self.health_warnings,
-                self.last_health, self.ledger.mark())
+                self.last_health, self.fallbacks, self.last_fallback,
+                self.ledger.mark())
 
     def _restore(self, snap) -> None:
         (levels, num_chunks, n_total, merge_ops,
-         health_checks, health_warnings, last_health, mark) = snap
+         health_checks, health_warnings, last_health,
+         fallbacks, last_fallback, mark) = snap
         self.levels = levels
         self.num_chunks = num_chunks
         self.n_total = n_total
@@ -316,30 +332,40 @@ class CoresetTree:
         self.health_checks = health_checks
         self.health_warnings = health_warnings
         self.last_health = last_health
+        self.fallbacks = fallbacks
+        self.last_fallback = last_fallback
         self.ledger.rollback(mark)
 
     # -- the operations ------------------------------------------------------
 
-    def insert(self, parts: Sequence[Any], y: Optional[Any] = None) -> InsertStats:
+    def insert(self, parts: Sequence[Any], y: Optional[Any] = None, *,
+               probe: Optional[Any] = None) -> InsertStats:
         """Absorb one superchunk: ONE pipelined leaf build over the chunk +
         the binary-counter carry chain of merges.  Returns the census.
 
+        ``probe`` (a no-arg callable) fires at every superchunk boundary of
+        the leaf build — the serving layer's deadline-check injection point;
+        a probe that raises aborts the insert and the rollback below makes
+        the abort free.
+
         Crash-safe: any failure mid-insert (a party exhausting its retries,
-        a killed process probe, OOM) rolls the tree back to its pre-insert
-        state — levels, key-chain counters, AND the ledger — so retrying
-        the same chunk replays the SAME leaf/merge keys and lands
-        draw-identically to a never-failed insert.  With a ``checkpoint``
-        bound, the retried leaf build additionally resumes its scan passes
-        at the last completed superchunk instead of restarting from row 0.
+        a killed process probe, OOM, a deadline breach) rolls the tree back
+        to its pre-insert state — levels, key-chain counters, AND the
+        ledger — so retrying the same chunk replays the SAME leaf/merge
+        keys and lands draw-identically to a never-failed insert.  With a
+        ``checkpoint`` bound, the retried leaf build additionally resumes
+        its scan passes at the last completed superchunk instead of
+        restarting from row 0.
         """
         snap = self._snapshot()
         try:
-            return self._insert(parts, y)
+            return self._insert(parts, y, probe)
         except BaseException:
             self._restore(snap)
             raise
 
-    def _insert(self, parts: Sequence[Any], y: Optional[Any]) -> InsertStats:
+    def _insert(self, parts: Sequence[Any], y: Optional[Any],
+                probe: Optional[Any] = None) -> InsertStats:
         t0 = time.perf_counter()
         led0 = self.ledger.total
         parts = [np.asarray(p) for p in parts]
@@ -355,9 +381,23 @@ class CoresetTree:
             fault_policy=self.fault_policy, params=self.params,
         )
         pipe = CoresetPipeline(ds, plan_cache=self.plan_cache)
-        cs = pipe.build(spec, key=self.leaf_key(self.num_chunks),
-                        ledger=self.ledger, transport=self.transport,
-                        checkpoint=self.checkpoint)
+        fallback = None
+        if self.failover:
+            out = pipe.build_failover(
+                spec, key=self.leaf_key(self.num_chunks),
+                ledger=self.ledger, probe=probe, transport=self.transport,
+                checkpoint=self.checkpoint,
+                memory_budget_bytes=self.memory_budget_bytes,
+            )
+            cs, fallback = out.coreset, out.fallback
+            if fallback is not None:
+                self.fallbacks += 1
+                self.last_fallback = fallback
+        else:
+            cs = pipe.build(spec, key=self.leaf_key(self.num_chunks),
+                            ledger=self.ledger, probe=probe,
+                            transport=self.transport,
+                            checkpoint=self.checkpoint)
         if cs.health is not None:
             self.health_checks += 1
             if not cs.health.healthy:
@@ -389,6 +429,7 @@ class CoresetTree:
             rescored_rows=rescored, comm_delta=self.ledger.total - led0,
             height_after=self.height,
             latency_s=time.perf_counter() - t0,
+            fallback=fallback,
         )
         return self.last_insert
 

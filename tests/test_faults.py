@@ -487,8 +487,11 @@ def test_plan_cache_lru_evicts_at_capacity():
     specs = [_spec(m=8 + i) for i in range(3)]
     for sp in specs:
         pc.get(sp, ds)
-    assert pc.stats() == {"size": 2, "max_entries": 2, "hits": 0,
-                          "misses": 3, "evictions": 1}
+    s = pc.stats()
+    assert {k: s[k] for k in ("size", "max_entries", "hits", "misses",
+                              "evictions")} == {
+        "size": 2, "max_entries": 2, "hits": 0, "misses": 3, "evictions": 1}
+    assert s["oldest_idle_s"] >= s["newest_idle_s"] >= 0.0
     pc.get(specs[2], ds)                  # newest entry: a hit
     assert pc.hits == 1
     pc.get(specs[0], ds)                  # evicted entry: a miss again

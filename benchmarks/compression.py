@@ -1,0 +1,381 @@
+"""Compression benchmark: the bit-billed wire under codec compression.
+
+Three experiments, recorded under the ``compression`` section of
+BENCH_kernels.json:
+
+* ``raw-identity`` — ``codec="raw_fp32"`` (the default) is a no-op in
+  every observable: for materialized and pipelined builds the draw,
+  the per-tag unit receipts AND the per-tag bit receipts are identical
+  transport-vs-transportless, and the plan's ``predicted_wire_bits``
+  equals both the coreset's ``comm_bits`` and the ledger's
+  ``total_bits`` to the bit.
+* ``detect-int8`` — the envelope's CRC covers the COMPRESSED payload:
+  under silent corruption every perturbed int8 table is caught at the
+  wire, every delivered table equals the quantized round-trip
+  ``decode(encode(x))`` within the codec's documented tolerance, and
+  every retransmission bills ``retry/<tag>`` exactly
+  ``wire_bits``-per-detection.  An end-to-end int8 build through a
+  corrupting verified wire lands draw-identical to the clean int8
+  build, paying only the measured retry bits.
+* ``tradeoff`` — the acceptance gate at n=2e4 for BOTH tasks (vrlr and
+  vkmc): ``int8_blockscale`` shrinks the round-1 mass tables >= 3x
+  versus ``raw_fp32`` while the downstream rel_error (via
+  :func:`evaluate`, never a proxy) stays within max(2x the raw
+  baseline, 0.02); every build's bits reconcile against the ledger
+  receipts to the bit, and lossy builds never exceed the plan's
+  certified ``predicted_wire_bits`` bound.
+
+  PYTHONPATH=src python -m benchmarks.compression --fast
+  PYTHONPATH=src python -m benchmarks.run --sections compression --strict
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import write_bench_json, write_rows
+from benchmarks.serve import _chunk_stream, _stream_ds
+from repro.core import (
+    CODEC_LADDER,
+    CommLedger,
+    CoresetPipeline,
+    CoresetSpec,
+    FaultPlan,
+    Transport,
+    evaluate,
+    fit_kmeans,
+    fit_ridge,
+    fmt_bits,
+    full_data_coreset,
+    get_codec,
+    standardize,
+)
+
+BENCH = "compression"
+SECTION = "compression"
+
+DETECT_RATE = 0.4            # per-message corruption odds at the wire
+DETECT_RETRIES = 16          # 0.4^17 ~ 2e-7 exhaustion odds per message
+SWEEP_N = 20_000             # the acceptance criterion's n (both modes)
+TABLE_RATIO_GATE = 3.0       # int8 round-1 tables >= 3x smaller than raw
+REL_FACTOR = 2.0             # compressed rel_error within 2x raw's...
+REL_FLOOR = 0.02             # ...with an absolute floor for the tiny regime
+
+R1_TABLE_TAG = "dis/round1/G_j"
+
+
+def _vrlr_stream(seed, n, d=12, T=3, num_chunks=4):
+    chunks = _chunk_stream(seed, num_chunks, n // num_chunks, d, T, True)
+    return chunks, _stream_ds(chunks)
+
+
+# --------------------------------------------------------------------------
+# Experiment 1: raw_fp32 is pinned identical to the pre-codec wire
+# --------------------------------------------------------------------------
+
+def run_raw_identity(fast: bool):
+    n = 8192 if fast else 32768
+    m, d, T = 256, 12, 3
+    _, ds = _vrlr_stream(21, n, d, T)
+    key = jax.random.PRNGKey(17)
+    entries, rows = [], []
+    for engine in ("materialized", "pipelined"):
+        spec = CoresetSpec(task="vrlr", budgets=m, engine=engine,
+                           backend="ref", block_size=512)
+        pipe = CoresetPipeline(ds)
+        plan = pipe.plan(spec)
+        if plan.codec != "raw_fp32":
+            raise AssertionError(
+                f"{engine}: default spec resolved codec {plan.codec!r}, "
+                f"expected raw_fp32")
+        t0 = time.time()
+        led0 = CommLedger()
+        cs0 = pipe.build(spec, key=key, ledger=led0)
+        led1 = CommLedger()
+        cs1 = pipe.build(spec, key=key, ledger=led1,
+                         transport=Transport(FaultPlan.none()))
+        wall = time.time() - t0
+        if not (np.array_equal(np.asarray(cs0.indices), np.asarray(cs1.indices))
+                and np.array_equal(np.asarray(cs0.weights),
+                                   np.asarray(cs1.weights))):
+            raise AssertionError(
+                f"{engine}: raw wire drifted from the transportless draw")
+        if led0.by_tag() != led1.by_tag():
+            raise AssertionError(
+                f"{engine}: per-tag UNIT receipts differ transport-vs-none: "
+                f"{led0.by_tag()} vs {led1.by_tag()}")
+        if led0.by_tag(bits=True) != led1.by_tag(bits=True):
+            raise AssertionError(
+                f"{engine}: per-tag BIT receipts differ transport-vs-none: "
+                f"{led0.by_tag(bits=True)} vs {led1.by_tag(bits=True)}")
+        for label, cs, led in (("bare", cs0, led0), ("wire", cs1, led1)):
+            if not (plan.predicted_wire_bits == cs.comm_bits
+                    == led.total_bits):
+                raise AssertionError(
+                    f"{engine}/{label}: predicted {plan.predicted_wire_bits} "
+                    f"!= coreset {cs.comm_bits} != ledger {led.total_bits} "
+                    f"bits")
+            if cs.comm_units != led.total:
+                raise AssertionError(
+                    f"{engine}/{label}: coreset units {cs.comm_units} != "
+                    f"ledger {led.total}")
+        entries.append({
+            "kind": "raw-identity", "engine": engine, "n": n, "m": m,
+            "wire_bits": led1.total_bits, "units": led1.total,
+            "draw_identical": True, "receipts_identical": True,
+        })
+        rows.append({
+            "bench": BENCH, "method": f"raw-identity-{engine}", "size": n,
+            "cost_mean": 1.0, "cost_std": 0.0, "comm": led1.total,
+            "wall_s": round(wall, 3),
+        })
+    return entries, rows
+
+
+# --------------------------------------------------------------------------
+# Experiment 2: CRC over the compressed payload + exact retry-bit billing
+# --------------------------------------------------------------------------
+
+def run_detect_int8(fast: bool):
+    rounds = 80 if fast else 320
+    T, cells = 3, 4096
+    c = get_codec("int8_blockscale")
+    row_bits = c.wire_bits((cells,), "float32")
+    rng = np.random.default_rng(0)
+    payloads = {j: rng.random(cells).astype(np.float32) + 0.1
+                for j in range(T)}
+    quantized = {j: c.decode(c.encode(p), p.shape, p.dtype)
+                 for j, p in payloads.items()}
+    for j, p in payloads.items():
+        if 8 * len(c.encode(p)) != row_bits:
+            raise AssertionError(
+                f"party {j}: packed length != wire_bits({cells},) — the "
+                f"shape-determined contract is broken")
+
+    tr = Transport(FaultPlan(seed=31, silent_corrupt=DETECT_RATE,
+                             silent_kind="scale",
+                             max_retries=DETECT_RETRIES))
+    led = CommLedger()
+    t0 = time.time()
+    for i in range(rounds):
+        delivered, failed = tr.ship(f"detect/int8/r{i}", payloads, led,
+                                    units={j: cells for j in range(T)},
+                                    codec="int8_blockscale")
+        if failed:
+            raise AssertionError(f"exhaustion at round {i} despite "
+                                 f"{DETECT_RETRIES} retries")
+        for j, arr in delivered.items():
+            if not np.array_equal(np.asarray(arr), quantized[j]):
+                raise AssertionError(
+                    f"party {j} delivered != decode(encode(x)) through a "
+                    f"VERIFYING wire at round {i}")
+            err = float(np.max(np.abs(np.asarray(arr) - payloads[j])))
+            tol = c.tolerance * float(np.max(np.abs(payloads[j])))
+            if err > tol:
+                raise AssertionError(
+                    f"party {j}: round-trip error {err:.3g} exceeds the "
+                    f"documented tolerance {tol:.3g}")
+    wall = time.time() - t0
+    st = tr.stats
+    if st.silent_corrupts == 0:
+        raise AssertionError(f"the plan never corrupted anything across "
+                             f"{rounds} rounds")
+    if st.silent_detected != st.silent_corrupts:
+        raise AssertionError(
+            f"{st.silent_corrupts} corruptions but only "
+            f"{st.silent_detected} detected — the CRC over the compressed "
+            f"payload missed some")
+    retry_bits = led.by_prefix("retry/", bits=True)
+    if retry_bits != st.bits_retried or retry_bits != row_bits * st.silent_detected:
+        raise AssertionError(
+            f"retry bill {retry_bits} bits != {row_bits} x "
+            f"{st.silent_detected} detections (stats say {st.bits_retried})")
+    entries = [{
+        "kind": "detect-int8", "rounds": rounds, "cells": cells,
+        "messages": rounds * T, "corrupts": st.silent_corrupts,
+        "detected": st.silent_detected, "detection_rate": 1.0,
+        "retry_bits": retry_bits, "row_bits": row_bits,
+    }]
+    rows = [{
+        "bench": BENCH, "method": "detect-int8", "size": rounds * T,
+        "cost_mean": 1.0, "cost_std": 0.0, "comm": led.total,
+        "wall_s": round(wall, 3),
+    }]
+
+    # end-to-end: an int8 build through a corrupting verified wire is
+    # draw-identical to the clean int8 build and pays exactly the
+    # measured retry bits on top
+    _, ds = _vrlr_stream(21, 8192 if fast else 16384)
+    key = jax.random.PRNGKey(17)
+    spec = CoresetSpec(task="vrlr", budgets=256, engine="materialized",
+                       backend="ref", codec="int8_blockscale",
+                       fault_policy="retry")
+    led_c = CommLedger()
+    cs_c = CoresetPipeline(ds).build(spec, key=key, ledger=led_c,
+                                     transport=Transport(FaultPlan.none()))
+    tr2 = Transport(FaultPlan(seed=47, silent_corrupt=0.3,
+                              silent_kind="sign",
+                              max_retries=DETECT_RETRIES))
+    led_x = CommLedger()
+    cs_x = CoresetPipeline(ds).build(spec, key=key, ledger=led_x,
+                                     transport=tr2)
+    if not (np.array_equal(np.asarray(cs_x.indices), np.asarray(cs_c.indices))
+            and np.array_equal(np.asarray(cs_x.weights),
+                               np.asarray(cs_c.weights))):
+        raise AssertionError("corrupted int8 wire drifted from the clean "
+                             "int8 build's draw")
+    if led_x.total_bits != led_c.total_bits + tr2.stats.bits_retried:
+        raise AssertionError(
+            f"corrupted-wire bill {led_x.total_bits} bits != clean "
+            f"{led_c.total_bits} + retried {tr2.stats.bits_retried}")
+    if cs_x.comm_bits != cs_c.comm_bits + tr2.stats.bits_retried:
+        raise AssertionError(
+            f"coreset comm_bits {cs_x.comm_bits} != clean {cs_c.comm_bits} "
+            f"+ retried {tr2.stats.bits_retried}")
+    entries.append({
+        "kind": "detect-int8-e2e", "n": ds.n, "m": 256,
+        "corrupts": tr2.stats.silent_corrupts,
+        "detected": tr2.stats.silent_detected, "draw_identical": True,
+        "bill_bits": led_x.total_bits, "clean_bits": led_c.total_bits,
+        "retry_bits": tr2.stats.bits_retried,
+    })
+    return entries, rows
+
+
+# --------------------------------------------------------------------------
+# Experiment 3: bits vs rel_error at the acceptance n, both tasks
+# --------------------------------------------------------------------------
+
+def _sweep_one(task, ds, m, rel_of, entries, rows):
+    """One codec ladder sweep on one task; returns per-codec results and
+    enforces the reconcile-to-the-bit receipts."""
+    T = ds.T
+    pipe = CoresetPipeline(ds)
+    key = jax.random.PRNGKey(100)
+    results = {}
+    for name in CODEC_LADDER:
+        spec = CoresetSpec(task=task, budgets=m, engine="materialized",
+                           backend="ref", codec=name,
+                           params={"k": 5} if task == "vkmc" else {})
+        plan = pipe.plan(spec)
+        if plan.codec != name:
+            raise AssertionError(f"{task}: plan resolved {plan.codec!r} "
+                                 f"for explicit codec {name!r}")
+        c = get_codec(name)
+        led = CommLedger()
+        t0 = time.time()
+        cs = pipe.build(spec, key=key, ledger=led,
+                        transport=Transport(FaultPlan.none()))
+        rel = rel_of(cs)
+        wall = time.time() - t0
+        table_bits = led.by_prefix(R1_TABLE_TAG, bits=True)
+        if table_bits != T * c.wire_bits((ds.n,), "float32"):
+            raise AssertionError(
+                f"{task}/{name}: round-1 table receipts {table_bits} bits "
+                f"!= {T} x wire_bits(({ds.n},)) = "
+                f"{T * c.wire_bits((ds.n,), 'float32')}")
+        if cs.comm_bits != led.total_bits:
+            raise AssertionError(
+                f"{task}/{name}: coreset comm_bits {cs.comm_bits} != "
+                f"ledger {led.total_bits}")
+        if c.lossless:
+            if cs.comm_bits != plan.predicted_wire_bits:
+                raise AssertionError(
+                    f"{task}/{name}: lossless bill {cs.comm_bits} != "
+                    f"predicted {plan.predicted_wire_bits}")
+        elif cs.comm_bits > plan.predicted_wire_bits:
+            raise AssertionError(
+                f"{task}/{name}: bill {cs.comm_bits} exceeds the certified "
+                f"bound {plan.predicted_wire_bits}")
+        results[name] = {"table_bits": table_bits,
+                         "total_bits": led.total_bits, "rel": rel}
+        entries.append({
+            "kind": "tradeoff", "task": task, "codec": name, "n": ds.n,
+            "m": m, "table_bits": table_bits, "total_bits": led.total_bits,
+            "total_fmt": fmt_bits(led.total_bits),
+            "rel_error": round(rel, 6),
+        })
+        rows.append({
+            "bench": BENCH, "method": f"tradeoff-{task}-{name}", "size": ds.n,
+            "cost_mean": round(rel, 6), "cost_std": 0.0,
+            "comm": led.total, "wall_s": round(wall, 3),
+        })
+    return results
+
+
+def run_tradeoff(fast: bool):
+    n, m, T = SWEEP_N, 512, 3
+    entries, rows = [], []
+
+    # vrlr: ridge rel_error via evaluate() against the full-data solve
+    _, ds = _vrlr_stream(3, n, 30, T)
+    lam = 0.1 * n
+    baseline = fit_ridge(ds, full_data_coreset(ds), lam).params
+
+    def rel_vrlr(cs):
+        rep = evaluate(ds, fit_ridge(ds, cs, lam), baseline=baseline)
+        return max(float(rep.rel_error), 0.0)
+
+    res_r = _sweep_one("vrlr", ds, m, rel_vrlr, entries, rows)
+
+    # vkmc: k-means rel_error via evaluate() against the full-data solve
+    chunks = _chunk_stream(5, 4, n // 4, 16, T, False)
+    ds2 = standardize(_stream_ds(chunks))
+    key_k = jax.random.PRNGKey(200)
+    baseline2 = fit_kmeans(ds2, full_data_coreset(ds2), 5,
+                           key=key_k, backend="ref").params
+
+    def rel_vkmc(cs):
+        fit = fit_kmeans(ds2, cs, 5, key=jax.random.fold_in(key_k, 1),
+                         backend="ref")
+        rep = evaluate(ds2, fit, baseline=baseline2, backend="ref")
+        return max(float(rep.rel_error), 0.0)
+
+    res_k = _sweep_one("vkmc", ds2, m, rel_vkmc, entries, rows)
+
+    for task, res in (("vrlr", res_r), ("vkmc", res_k)):
+        ratio = res["raw_fp32"]["table_bits"] / res["int8_blockscale"]["table_bits"]
+        if ratio < TABLE_RATIO_GATE:
+            raise AssertionError(
+                f"{task}: int8 round-1 tables only {ratio:.2f}x smaller "
+                f"than raw (gate {TABLE_RATIO_GATE}x)")
+        gate = max(REL_FACTOR * res["raw_fp32"]["rel"], REL_FLOOR)
+        for name in ("fp16", "int8_blockscale"):
+            if res[name]["rel"] > gate:
+                raise AssertionError(
+                    f"{task}/{name}: rel_error {res[name]['rel']:.4f} "
+                    f"exceeds max({REL_FACTOR}x raw "
+                    f"{res['raw_fp32']['rel']:.4f}, {REL_FLOOR}) at n={n}")
+        entries.append({
+            "kind": "tradeoff-gate", "task": task, "n": n, "m": m,
+            "table_ratio_int8": round(ratio, 3),
+            "rel_gate": round(gate, 6),
+            "rel_raw": round(res["raw_fp32"]["rel"], 6),
+            "rel_fp16": round(res["fp16"]["rel"], 6),
+            "rel_int8": round(res["int8_blockscale"]["rel"], 6),
+        })
+    return entries, rows
+
+
+def run(fast: bool = True):
+    entries, rows = [], []
+    for fn in (run_raw_identity, run_detect_int8, run_tradeoff):
+        e, r = fn(fast)
+        entries.extend(e)
+        rows.extend(r)
+    write_rows(BENCH, rows)
+    write_bench_json(SECTION, entries)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true", default=True)
+    ap.add_argument("--full", dest="fast", action="store_false")
+    args = ap.parse_args()
+    for r in run(fast=args.fast):
+        print(r)

@@ -45,6 +45,7 @@ MODULES = [
     "chaos",            # fault injection: retry billing + degrade + resume
     "integrity",        # silent corruption: detection + quarantine + overhead
     "overload",         # hostile tenant mix: shed/breaker/failover gates
+    "compression",      # codec wire: raw identity + CRC/retry bits + tradeoff
 ]
 
 

@@ -21,6 +21,9 @@ Public API:
   payload_digest, check_mass_table, check_weights,
   check_merge_children, health_from_masses,
   require_valid_masses                                    (integrity — verified wire)
+  Codec, get_codec, WIRE_CODECS, CODEC_LADDER,
+  WirePayload, fmt_bits, UNIT_BITS,
+  predict_dis_bits, predict_uniform_bits                  (wire — compressed codecs)
   dis_plan, dis_plan_full, dis_plan_blocked, server_plan, uniform_plan,
   dis_sample, uniform_sample, dis_marginals,
   dis_blocked_marginals, blocked_geometry                 (dis — Algorithm 1)
@@ -154,6 +157,17 @@ from repro.core.sensitivity import (
     vrlr_local_scores,
 )
 from repro.core.vfl import VFLDataset, split_columns, standardize
+from repro.core.wire import (
+    CODEC_LADDER,
+    UNIT_BITS,
+    WIRE_CODECS,
+    Codec,
+    WirePayload,
+    fmt_bits,
+    get_codec,
+    predict_dis_bits,
+    predict_uniform_bits,
+)
 from repro.core.vkmc import distdim, kmeans, kmeans_cost, kmeans_plusplus, lloyd
 from repro.core.vrlr import (
     central_comm_cost,

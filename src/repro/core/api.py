@@ -81,6 +81,7 @@ from repro.core.sensitivity import (
 )
 from repro.core.vfl import VFLDataset
 from repro.core.vkmc import kmeans
+from repro.core.wire import WirePayload, get_codec
 from repro.utils.registry import Registry
 
 CORESET_TASKS = Registry("coreset_task")
@@ -245,23 +246,27 @@ def _policy_retries(fault_policy: str) -> Optional[int]:
 def _faulted_round1(
     spec: CoresetTask, ds: VFLDataset, transport: Transport,
     ledger: Optional[CommLedger], fault_policy: str,
-) -> Tuple[VFLDataset, Optional[list], Optional[DegradedBuild]]:
+    payload: Optional[WirePayload] = None,
+) -> Tuple[VFLDataset, Optional[list], Optional[DegradedBuild], int, int]:
     """Deliver DIS round 1 through the transport; under ``degrade`` a party
     exhausting its retries here — BEFORE any score travels — is dropped and
     the build continues over the survivors.
 
+    ``payload`` is the wire descriptor for the mass-table row each party's
+    G_j upload physically carries — it drives the bits column only.
     Returns ``(effective dataset, surviving original party ids or None,
-    DegradedBuild receipt or None, round-1 units billed)``.  The label
-    party (T-1) is irreplaceable for a labels-bearing task, and losing
-    every party is unrecoverable — both re-raise :exc:`PartyUnavailable`.
+    DegradedBuild receipt or None, round-1 units billed, round-1 bits
+    billed)``.  The label party (T-1) is irreplaceable for a labels-bearing
+    task, and losing every party is unrecoverable — both re-raise
+    :exc:`PartyUnavailable`.
     """
     rep = transport.deliver(
-        CommSchedule.dis_round1(ds.T), ledger,
+        CommSchedule.dis_round1(ds.T, payload=payload), ledger,
         max_retries=_policy_retries(fault_policy),
         drop_on_exhaust=(fault_policy == "degrade"),
     )
     if not rep.failed:
-        return ds, None, None, rep.units
+        return ds, None, None, rep.units, rep.bits
     alive = sorted(set(range(ds.T)) - set(rep.failed))
     dropped = tuple(sorted(rep.failed.values(), key=lambda d: d.party))
     if not alive:
@@ -273,7 +278,7 @@ def _faulted_round1(
         raise PartyUnavailable(d.party, d.tag, d.attempts)
     degraded = DegradedBuild(dropped=dropped, surviving=tuple(alive),
                              total_parties=ds.T)
-    return ds.select_parties(alive), alive, degraded, rep.units
+    return ds.select_parties(alive), alive, degraded, rep.units, rep.bits
 
 
 def _validators_on(fault_policy: str) -> bool:
@@ -307,7 +312,7 @@ def _task_bound(spec: CoresetTask, eff_ds: VFLDataset, backend: str,
 def _integrity_round1(
     spec: CoresetTask, eff_ds: VFLDataset, transport: Transport,
     ledger: Optional[CommLedger], fault_policy: str, masses,
-    backend: str, params: dict,
+    backend: str, params: dict, codec: str = "raw_fp32",
 ):
     """The round-1 integrity seam: ship each party's mass row under a
     checksummed :class:`~repro.core.integrity.WireEnvelope`, then run the
@@ -323,17 +328,28 @@ def _integrity_round1(
     under ``quarantine`` (validator hits under ``fail`` raise a
     party-attributed :exc:`IntegrityError`; transport-level detections
     were already retried and billed inside ``ship``), and
-    ``retry_units`` is the retransmission traffic ship billed, so the
-    returned coreset's ``comm_units`` stays the composed ledger truth."""
+    ``retry_units``/``retry_bits`` are the retransmission traffic ship
+    billed, so the returned coreset's ``comm_units``/``comm_bits`` stay
+    the composed ledger truth.
+
+    ``codec`` packs each row through :mod:`repro.core.wire`: the envelope
+    CRC covers the ENCODED bytes and a lossy codec delivers the quantized
+    table (the draw consumes what crossed the wire).  A lossy codec also
+    skips the row-sum/scalar cross-check — the quantized row cannot match
+    the honest fp32 scalar by construction; the finiteness/nonnegativity/
+    bound validators still run on the delivered values."""
+    c = get_codec(codec)
     tbl = np.asarray(masses)
     totals = tbl.sum(axis=1)
     rows = {j: tbl[j] for j in range(tbl.shape[0])}
     r0 = transport.stats.units_retried
+    b0 = transport.stats.bits_retried
     delivered, failed = transport.ship(
         "dis/round1/G_j", rows, ledger, units=1,
         max_retries=_policy_retries(fault_policy),
-        drop_on_exhaust=(fault_policy == "quarantine"))
+        drop_on_exhaust=(fault_policy == "quarantine"), codec=codec)
     retry_units = transport.stats.units_retried - r0
+    retry_bits = transport.stats.bits_retried - b0
     changed = any(delivered.get(j) is not rows[j] for j in rows)
     out = (np.stack([np.asarray(delivered.get(j, rows[j]))
                      for j in range(len(rows))])
@@ -341,10 +357,11 @@ def _integrity_round1(
     offenders = set(failed)
     if _validators_on(fault_policy):
         offenders |= set(require_valid_masses(
-            tbl if out is None else out, totals,
+            tbl if out is None else out,
+            totals if c.lossless else None,
             bound=_task_bound(spec, eff_ds, backend, params),
             policy=fault_policy))
-    return out, tuple(sorted(offenders)), retry_units
+    return out, tuple(sorted(offenders)), retry_units, retry_bits
 
 
 def _quarantine(
@@ -378,27 +395,56 @@ def _quarantine(
     return ds.select_parties(survivors), survivors, receipt
 
 
+def _round2_wire(plan, alive: Optional[list], T: int, codec: str):
+    """Pre-encode the round-2 index uploads ONCE: the returned payload
+    descriptors (aligned with ``plan.counts``) carry the measured packed
+    bits for :meth:`CommSchedule.dis_rounds23`, and the returned blobs are
+    handed to :meth:`Transport.ship` via ``encoded=`` — bits billed equal
+    bytes sealed by construction (delta-varint uploads are value-dependent,
+    so the bound-only descriptor would over-bill)."""
+    counts = np.asarray(plan.counts)
+    ups = split_uploads(np.asarray(plan.indices), counts)
+    orig = list(alive) if alive is not None else list(range(T))
+    c = get_codec(codec)
+    payloads: list = [None] * len(ups)
+    blobs: dict = {}
+    for j in range(len(ups)):
+        if counts[j] <= 0:
+            continue
+        arr = np.asarray(ups[j])
+        blob = c.encode(arr)
+        blobs[orig[j]] = blob
+        payloads[j] = WirePayload.measured(
+            arr.shape, str(arr.dtype), codec, 8 * len(blob))
+    return payloads, blobs
+
+
 def _ship_round2(
     transport: Transport, ledger: Optional[CommLedger], fault_policy: str,
-    plan, alive: Optional[list], T: int,
+    plan, alive: Optional[list], T: int, codec: str = "raw_fp32",
+    blobs: Optional[dict] = None,
 ):
     """Ship the round-2 index uploads under envelopes.  Units per party are
     the realized a_j — the exact sizes ``CommSchedule.dis_rounds23`` billed,
     so envelope-detected retransmissions land under ``retry/dis/round2/S_up``
-    at the message's true cost.  Returns the (possibly corrupted, if the
-    transport does not verify) realized index vector plus the retry units
-    billed, and raises through the weight validator when the policy
-    defends."""
+    at the message's true cost (measured packed bits in the bits column).
+    ``blobs`` are the pre-encoded uploads from :func:`_round2_wire`, sealed
+    as-is.  Returns the (possibly corrupted, if the transport does not
+    verify) realized index vector plus the retry units and bits billed, and
+    raises through the weight validator when the policy defends."""
     counts = np.asarray(plan.counts)
     ups = split_uploads(np.asarray(plan.indices), counts)
     orig = list(alive) if alive is not None else list(range(T))
     payloads = {orig[j]: ups[j] for j in range(len(ups)) if counts[j] > 0}
     units = {orig[j]: int(counts[j]) for j in range(len(ups)) if counts[j] > 0}
     r0 = transport.stats.units_retried
+    b0 = transport.stats.bits_retried
     delivered, _ = transport.ship(
         "dis/round2/S_up", payloads, ledger, units=units,
-        max_retries=_policy_retries(fault_policy), drop_on_exhaust=False)
+        max_retries=_policy_retries(fault_policy), drop_on_exhaust=False,
+        codec=codec, encoded=blobs)
     retry_units = transport.stats.units_retried - r0
+    retry_bits = transport.stats.bits_retried - b0
     if _validators_on(fault_policy):
         why = check_weights(plan.weights)
         if why is not None:
@@ -406,17 +452,18 @@ def _ship_round2(
                                  tag="dis/round3/g_scores")
     changed = any(delivered[p] is not payloads[p] for p in payloads)
     if not changed:
-        return plan.indices, retry_units
+        return plan.indices, retry_units, retry_bits
     parts = [np.asarray(delivered.get(orig[j], ups[j]))
              for j in range(len(ups))]
     out = jnp.asarray(np.concatenate(parts)) if parts else plan.indices
-    return out, retry_units
+    return out, retry_units, retry_bits
 
 
 def _exec_materialized(
     spec: CoresetTask, ds: VFLDataset, m: int, key, backend: str,
     ledger: Optional[CommLedger], params: dict,
     transport: Optional[Transport] = None, fault_policy: str = "fail",
+    codec: str = "raw_fp32",
 ) -> Coreset:
     """The eager sequential engine — the fidelity reference against the
     seed's builders (scores computed eagerly, DIS on the full matrix).
@@ -435,7 +482,8 @@ def _exec_materialized(
         schedule = CommSchedule.uniform(ds.T, m)
         if transport is None:
             schedule.record(ledger)
-            return Coreset(S, w, schedule.total)
+            return Coreset(S, w, schedule.total,
+                           comm_bits=schedule.total_bits)
         rep = transport.deliver(schedule, ledger, max_retries=retries,
                                 drop_on_exhaust=(fault_policy == "degrade"))
         degraded = None
@@ -444,26 +492,39 @@ def _exec_materialized(
             alive = sorted(set(range(ds.T)) - set(rep.failed))
             degraded = DegradedBuild(dropped=dropped, surviving=tuple(alive),
                                      total_parties=ds.T)
-        return Coreset(S, w, rep.units, degraded=degraded)
+        return Coreset(S, w, rep.units, comm_bits=rep.bits,
+                       degraded=degraded)
 
+    # the round-1 G_j upload physically carries the per-row mass table —
+    # one float32 entry per row on this engine, descriptor shared by the
+    # recorded and the delivered path so their bits columns agree
+    r1_payload = WirePayload.of((ds.n,), "float32", codec)
     if transport is None:
+        if codec != "raw_fp32":
+            raise ValueError(
+                f"codec={codec!r} quantizes what crosses the wire; without "
+                f"a transport nothing crosses it — the recorded path "
+                f"supports codec='raw_fp32' only"
+            )
         scores, dis_key = spec.score_fn(key, ds, backend=backend, **params)
         plan = dis_plan_full(dis_key, scores, m)
         if not bool(plan.totals.sum() > 0):
             raise ValueError("DIS requires a positive total score")
-        schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
+        schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts),
+                                    round1_payload=r1_payload)
         schedule.record(ledger)
         return Coreset(plan.indices, plan.weights, schedule.total,
+                       comm_bits=schedule.total_bits,
                        health=health_from_masses(np.asarray(scores)))
 
-    eff_ds, alive, degraded, units1 = _faulted_round1(
-        spec, ds, transport, ledger, fault_policy)
+    eff_ds, alive, degraded, units1, bits1 = _faulted_round1(
+        spec, ds, transport, ledger, fault_policy, payload=r1_payload)
     scores, dis_key = spec.score_fn(key, eff_ds, backend=backend, **params)
     # integrity seam: the per-row score table IS this engine's round-1 mass
     # payload — ship it under envelopes, validate what arrived
-    delivered, offenders, ship_units = _integrity_round1(
+    delivered, offenders, ship_units, ship_bits = _integrity_round1(
         spec, eff_ds, transport, ledger, fault_policy,
-        np.asarray(scores), backend, params)
+        np.asarray(scores), backend, params, codec=codec)
     if offenders:
         eff_ds, alive, degraded = _quarantine(spec, ds, alive, degraded,
                                               offenders)
@@ -471,9 +532,10 @@ def _exec_materialized(
         scores, dis_key = spec.score_fn(key, eff_ds, backend=backend,
                                         **params)
     elif delivered is not None:
-        # an unverifying transport delivered corrupted masses — they drive
-        # the draw, which is exactly the undefended blow-up the integrity
-        # benchmark measures
+        # what crossed the wire drives the draw: a lossy codec's quantized
+        # table on the clean path, or — with verification off — corrupted
+        # masses, exactly the undefended blow-up the integrity benchmark
+        # measures
         scores = jnp.asarray(delivered)
     health = health_from_masses(np.asarray(scores))
     plan = dis_plan_full(dis_key, scores, m)
@@ -481,15 +543,19 @@ def _exec_materialized(
         raise ValueError("DIS requires a positive total score")
     # rounds 2-3 exhaust hard even under degrade: by now the scores exist
     # and dropping a party would orphan its drawn rows (documented)
+    up_payloads, up_blobs = _round2_wire(plan, alive, ds.T, codec)
     rep23 = transport.deliver(
         CommSchedule.dis_rounds23(ds.T, m, counts=np.asarray(plan.counts),
-                                  parties=alive),
+                                  parties=alive,
+                                  upload_payloads=up_payloads),
         ledger, max_retries=retries, drop_on_exhaust=False,
     )
-    indices, r2_units = _ship_round2(transport, ledger, fault_policy, plan,
-                                     alive, ds.T)
+    indices, r2_units, r2_bits = _ship_round2(
+        transport, ledger, fault_policy, plan, alive, ds.T,
+        codec=codec, blobs=up_blobs)
     return Coreset(indices, plan.weights,
                    units1 + rep23.units + ship_units + r2_units,
+                   comm_bits=bits1 + rep23.bits + ship_bits + r2_bits,
                    degraded=degraded, health=health)
 
 
@@ -524,7 +590,7 @@ def _exec_fused(
         S, w = fn(key)
         schedule = CommSchedule.uniform(ds.T, m)
         schedule.record(ledger)
-        return Coreset(S, w, schedule.total)
+        return Coreset(S, w, schedule.total, comm_bits=schedule.total_bits)
 
     cache_key = (spec, ds.dims, ds.y is not None, ds.n, m, backend,
                  tuple(sorted(params.items())))
@@ -540,9 +606,12 @@ def _exec_fused(
     plan = fn(key, tuple(ds.parts), ds.y)
     if not bool(plan.totals.sum() > 0):
         raise ValueError("DIS requires a positive total score")
-    schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
+    schedule = CommSchedule.dis(
+        ds.T, m, counts=np.asarray(plan.counts),
+        round1_payload=WirePayload.of((ds.n,), "float32", "raw_fp32"))
     schedule.record(ledger)
-    return Coreset(plan.indices, plan.weights, schedule.total)
+    return Coreset(plan.indices, plan.weights, schedule.total,
+                   comm_bits=schedule.total_bits)
 
 
 # sharded block-mass helpers per task (the `sharded_masses` plan toggle)
@@ -584,6 +653,7 @@ def _exec_streaming(
     prefetch: bool, pipelined: bool, sharded_masses: bool, params: dict,
     transport: Optional[Transport] = None, fault_policy: str = "fail",
     checkpoint: Optional[StreamCheckpoint] = None,
+    codec: str = "raw_fp32",
 ) -> Coreset:
     """The streamed / pipelined engines: block-scan scoring + hierarchical
     (party, block) DIS.  ``pipelined`` selects the superchunk-grouped
@@ -605,6 +675,7 @@ def _exec_streaming(
         dis_plan_streamed,
         dis_plan_streamed_batched,
         make_stream_scorer,
+        with_masses,
     )
 
     if spec.needs_labels and ds.y is None:
@@ -615,7 +686,8 @@ def _exec_streaming(
         schedule = CommSchedule.uniform(ds.T, m)
         if transport is None:
             schedule.record(ledger)
-            return Coreset(S, w, schedule.total)
+            return Coreset(S, w, schedule.total,
+                           comm_bits=schedule.total_bits)
         rep = transport.deliver(schedule, ledger, max_retries=retries,
                                 drop_on_exhaust=(fault_policy == "degrade"))
         degraded = None
@@ -624,14 +696,25 @@ def _exec_streaming(
             alive = sorted(set(range(ds.T)) - set(rep.failed))
             degraded = DegradedBuild(dropped=dropped, surviving=tuple(alive),
                                      total_parties=ds.T)
-        return Coreset(S, w, rep.units, degraded=degraded)
+        return Coreset(S, w, rep.units, comm_bits=rep.bits,
+                       degraded=degraded)
 
+    # the streamed round-1 payload is the (T, nb) block-mass table — one
+    # float32 entry per BLOCK per party, not per row
+    nb = ds.block_geometry(int(block_size))[0]
+    r1_payload = WirePayload.of((nb,), "float32", codec)
+    if transport is None and codec != "raw_fp32":
+        raise ValueError(
+            f"codec={codec!r} quantizes what crosses the wire; without a "
+            f"transport nothing crosses it — the recorded path supports "
+            f"codec='raw_fp32' only"
+        )
     alive = degraded = None
-    units1 = 0
+    units1 = bits1 = 0
     eff_ds = ds
     if transport is not None:
-        eff_ds, alive, degraded, units1 = _faulted_round1(
-            spec, ds, transport, ledger, fault_policy)
+        eff_ds, alive, degraded, units1, bits1 = _faulted_round1(
+            spec, ds, transport, ledger, fault_policy, payload=r1_payload)
 
     def _build_scorer(eff):
         masses = None
@@ -654,22 +737,21 @@ def _exec_streaming(
                                   ckpt=checkpoint, **params)
 
     scorer = _build_scorer(eff_ds)
-    ship_units = 0
+    ship_units = ship_bits = 0
     if transport is not None:
         # integrity seam: the (T, nb) block-mass table is the streamed
         # round-1 payload — ship it under envelopes, validate what arrived
-        delivered, offenders, ship_units = _integrity_round1(
+        delivered, offenders, ship_units, ship_bits = _integrity_round1(
             spec, eff_ds, transport, ledger, fault_policy,
-            np.asarray(scorer.masses), backend, params)
+            np.asarray(scorer.masses), backend, params, codec=codec)
         if offenders:
             eff_ds, alive, degraded = _quarantine(spec, ds, alive, degraded,
                                                   offenders)
             scorer = _build_scorer(eff_ds)  # rescore the survivors
         elif delivered is not None:
-            # unverifying transport: the corrupted table drives the draw
-            scorer = dataclasses.replace(
-                scorer, masses=jnp.asarray(
-                    delivered.astype(np.asarray(scorer.masses).dtype)))
+            # what crossed the wire drives the draw: the lossy codec's
+            # quantized table, or — unverified — a corrupted one
+            scorer = with_masses(scorer, delivered)
     health = health_from_masses(np.asarray(scorer.masses),
                                 gram_conds=scorer.gram_conds)
     if not bool(scorer.masses.sum() > 0):
@@ -681,19 +763,24 @@ def _exec_streaming(
     if checkpoint is not None:
         checkpoint.clear()            # the build completed; state is stale
     if transport is None:
-        schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts))
+        schedule = CommSchedule.dis(ds.T, m, counts=np.asarray(plan.counts),
+                                    round1_payload=r1_payload)
         schedule.record(ledger)
         return Coreset(plan.indices, plan.weights, schedule.total,
-                       health=health)
+                       comm_bits=schedule.total_bits, health=health)
+    up_payloads, up_blobs = _round2_wire(plan, alive, ds.T, codec)
     rep23 = transport.deliver(
         CommSchedule.dis_rounds23(ds.T, m, counts=np.asarray(plan.counts),
-                                  parties=alive),
+                                  parties=alive,
+                                  upload_payloads=up_payloads),
         ledger, max_retries=retries, drop_on_exhaust=False,
     )
-    indices, r2_units = _ship_round2(transport, ledger, fault_policy, plan,
-                                     alive, ds.T)
+    indices, r2_units, r2_bits = _ship_round2(
+        transport, ledger, fault_policy, plan, alive, ds.T,
+        codec=codec, blobs=up_blobs)
     return Coreset(indices, plan.weights,
                    units1 + rep23.units + ship_units + r2_units,
+                   comm_bits=bits1 + rep23.bits + ship_bits + r2_bits,
                    degraded=degraded, health=health)
 
 
@@ -717,6 +804,11 @@ class BatchedCoresets:
     counts: Optional[jax.Array]   # (R, M, T) int; None for the uniform task
     ms: Tuple[int, ...]
     T: int
+    #: Round-1 mass-table cells per party (n on this engine); 0 on legacy
+    #: grids predating the bits column — their schedules then bill the
+    #: scalar-only convention.  The batched engine is raw_fp32-only (it
+    #: never transports), so no codec field is needed.
+    cells: int = 0
 
     @property
     def num_seeds(self) -> int:
@@ -726,8 +818,11 @@ class BatchedCoresets:
         m = self.ms[m_idx]
         if self.counts is None:
             return CommSchedule.uniform(self.T, m)
+        r1 = (WirePayload.of((self.cells,), "float32", "raw_fp32")
+              if self.cells else None)
         return CommSchedule.dis(
-            self.T, m, counts=np.asarray(self.counts[seed_idx, m_idx])
+            self.T, m, counts=np.asarray(self.counts[seed_idx, m_idx]),
+            round1_payload=r1,
         )
 
     def coreset(
@@ -741,6 +836,7 @@ class BatchedCoresets:
             self.indices[seed_idx, m_idx, :m],
             self.weights[seed_idx, m_idx, :m],
             schedule.total,
+            comm_bits=schedule.total_bits,
         )
 
 
@@ -805,7 +901,7 @@ def _exec_batched(
     return BatchedCoresets(
         indices=S, weights=w,
         counts=None if spec.score_fn is None else counts,
-        ms=ms, T=ds.T,
+        ms=ms, T=ds.T, cells=ds.n,
     )
 
 
@@ -921,14 +1017,15 @@ class CoresetPipeline:
             return _exec_materialized(task, self.ds, m, key, ep.backend,
                                       ledger, cspec.params,
                                       transport=transport,
-                                      fault_policy=cspec.fault_policy)
+                                      fault_policy=cspec.fault_policy,
+                                      codec=ep.codec)
         return _exec_streaming(
             task, self.ds, m, key, ep.backend, ledger, probe,
             cspec.block_size, ep.chunk_blocks, ep.prefetch,
             pipelined=(ep.engine == "pipelined"),
             sharded_masses=cspec.sharded_masses, params=cspec.params,
             transport=transport, fault_policy=cspec.fault_policy,
-            checkpoint=checkpoint,
+            checkpoint=checkpoint, codec=ep.codec,
         )
 
     def build_failover(
@@ -1155,8 +1252,10 @@ def build_coreset_streaming(
 
     ``chunk_blocks`` (default :data:`repro.core.plan.DEFAULT_CHUNK_BLOCKS`)
     sets the pipelined dispatch granularity; ``prefetch`` (default
-    backend-aware: on for TPU/GPU, off on CPU where zero-copy staging
-    already overlaps async dispatch) double-buffers the superchunk
+    :data:`repro.core.plan.PREFETCH_DEFAULT` — the measured winner per
+    backend: off on CPU, where the staging thread competes with compute
+    for the same cores and costs ~25% throughput, on for TPU/GPU, where
+    the transfer engine overlaps for free) double-buffers the superchunk
     staging.  Knob validation is centralized in
     :class:`~repro.core.plan.CoresetSpec` (non-positive / non-integral
     values raise ``ValueError`` before any work); ``chunk_blocks`` above

@@ -43,6 +43,12 @@ class Coreset:
     indices: jax.Array   # (m,) int
     weights: jax.Array   # (m,) float
     comm_units: int      # construction cost in paper units
+    #: Construction cost in wire bits — the packed bytes the codec actually
+    #: moved (32 bits/unit on the raw path, measured blob sizes under a
+    #: compressed codec, retransmissions included).  0 from engines that
+    #: predate or bypass the bits column (jit/batched cells extracted
+    #: without a ledger).
+    comm_bits: int = 0
     degraded: Optional["DegradedBuild"] = None
     health: Optional["HealthReport"] = None
 
@@ -86,6 +92,7 @@ class MaterializedCoreset:
     parts: List[np.ndarray]             # party j's selected rows (m, d_j)
     y: Optional[np.ndarray] = None      # (m,), when the task carries labels
     comm_units: int = 0
+    comm_bits: int = 0                  # wire bits behind those units
 
     @property
     def m(self) -> int:
@@ -104,7 +111,7 @@ class MaterializedCoreset:
         """The index/weight view (global ids) for ledger-free evaluation
         against the full dataset."""
         return Coreset(jnp.asarray(self.indices), jnp.asarray(self.weights),
-                       self.comm_units)
+                       self.comm_units, comm_bits=self.comm_bits)
 
     @staticmethod
     def from_coreset(
@@ -130,6 +137,7 @@ class MaterializedCoreset:
             parts=[np.asarray(p)[idx] for p in ds.parts],
             y=y,
             comm_units=int(cs.comm_units),
+            comm_bits=int(cs.comm_bits),
         )
 
     @staticmethod
@@ -160,6 +168,7 @@ class MaterializedCoreset:
                    for j in range(T)],
             y=np.concatenate([m.y for m in mats]) if has_y else None,
             comm_units=sum(m.comm_units for m in mats),
+            comm_bits=sum(m.comm_bits for m in mats),
         )
 
 

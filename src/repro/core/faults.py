@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.core.comm import CommLedger, CommSchedule
 from repro.core.integrity import WireEnvelope
+from repro.core.wire import UNIT_BITS, get_codec
 
 FAULT_POLICIES = ("fail", "retry", "degrade", "quarantine")
 
@@ -481,6 +482,8 @@ class TransportStats:
     exhausted: int = 0
     units_base: int = 0
     units_retried: int = 0
+    bits_base: int = 0
+    bits_retried: int = 0
     sim_time_s: float = 0.0
     silent_corrupts: int = 0
     silent_detected: int = 0
@@ -503,10 +506,17 @@ class DeliveryReport:
     retries: int
     failed: Mapping[int, DroppedParty]
     sim_time_s: float
+    bits_base: int = 0
+    bits_retried: int = 0
 
     @property
     def units(self) -> int:
         return self.units_base + self.units_retried
+
+    @property
+    def bits(self) -> int:
+        """Packed wire bits billed — base schedule plus retransmissions."""
+        return self.bits_base + self.bits_retried
 
 
 class Transport:
@@ -564,6 +574,8 @@ class Transport:
         failed: Dict[int, DroppedParty] = {}
         units_base = 0
         units_retried = 0
+        bits_base = 0
+        bits_retried = 0
         retries = 0
         sim0 = stats.sim_time_s
         for op in schedule.ops:
@@ -578,22 +590,30 @@ class Transport:
                 if ev.ok:
                     if ledger is not None:
                         if op.down:
-                            ledger.server_to_party(op.tag, op.party, op.units)
+                            ledger.server_to_party(op.tag, op.party, op.units,
+                                                   op.bits)
                         else:
-                            ledger.party_to_server(op.tag, op.party, op.units)
+                            ledger.party_to_server(op.tag, op.party, op.units,
+                                                   op.bits)
                     stats.delivered += 1
                     stats.units_base += op.units
+                    stats.bits_base += op.bits
                     units_base += op.units
+                    bits_base += op.bits
                     break
                 # failed transmission: the bytes still crossed the link
                 if ledger is not None:
                     rtag = f"retry/{op.tag}"
                     if op.down:
-                        ledger.server_to_party(rtag, op.party, op.units)
+                        ledger.server_to_party(rtag, op.party, op.units,
+                                               op.bits)
                     else:
-                        ledger.party_to_server(rtag, op.party, op.units)
+                        ledger.party_to_server(rtag, op.party, op.units,
+                                               op.bits)
                 stats.units_retried += op.units
+                stats.bits_retried += op.bits
                 units_retried += op.units
+                bits_retried += op.bits
                 setattr(stats, {"drop": "drops", "corrupt": "corrupts",
                                 "timeout": "timeouts"}[ev.status],
                         getattr(stats, {"drop": "drops", "corrupt": "corrupts",
@@ -612,6 +632,7 @@ class Transport:
             units_base=units_base, units_retried=units_retried,
             retries=retries, failed=failed,
             sim_time_s=stats.sim_time_s - sim0,
+            bits_base=bits_base, bits_retried=bits_retried,
         )
 
     def ship(
@@ -624,6 +645,8 @@ class Transport:
         down: bool = False,
         max_retries: Optional[int] = None,
         drop_on_exhaust: bool = False,
+        codec: Optional[str] = None,
+        encoded: Optional[Mapping[int, bytes]] = None,
     ) -> Tuple[Dict[int, Any], Dict[int, DroppedParty]]:
         """Deliver VALUE payloads under checksummed :class:`WireEnvelope`\\ s.
 
@@ -632,15 +655,27 @@ class Transport:
         is sealed, silently corrupted per the plan's ``silent_corrupt`` fate
         chain, and — when the transport verifies — every detected mismatch
         is retransmitted and billed under ``retry/<tag>`` with the message's
-        full units, the exact :meth:`deliver` convention.  With verification
-        off the corrupted payload is DELIVERED, the attack the value-level
-        validators exist to catch.
+        full units AND packed bits, the exact :meth:`deliver` convention.
+        With verification off the corrupted payload is DELIVERED, the
+        attack the value-level validators exist to catch.
+
+        ``codec`` names a :mod:`repro.core.wire` format: the payload is
+        packed through it and the envelope seals the ENCODED bytes (the
+        CRC covers the compressed payload — corrupting either the scales
+        or the quantized words trips it), retries bill the measured packed
+        size, and a lossy codec delivers ``decode(encode(payload))`` so
+        downstream draws consume exactly what crossed the wire.  ``encoded``
+        supplies pre-packed blobs (the round-2 uploads, encoded once when
+        the schedule was built) so bits billed == bytes sealed by
+        construction.  With ``codec=None`` the envelope seals the raw
+        array, the pre-compression behavior.
 
         ``units`` is the per-party message size (scalar for all, or a
         mapping; default 1 — the round-1 scalar convention).  Returns
         ``(delivered, failed)``: ``delivered`` maps party -> payload, and is
-        the ORIGINAL object whenever no corruption fired (so the clean path
-        stays bit-identical and free of host/device round-trips); ``failed``
+        the ORIGINAL object whenever no corruption fired and the codec is
+        value-exact for the payload's dtype (so the clean raw path stays
+        bit-identical and free of host/device round-trips); ``failed``
         maps party -> :class:`DroppedParty` for parties whose every
         transmission was corrupted (only with ``drop_on_exhaust=True``;
         otherwise :exc:`PartyUnavailable` raises)."""
@@ -650,6 +685,7 @@ class Transport:
         stats = self.stats
         delivered: Dict[int, Any] = {}
         failed: Dict[int, DroppedParty] = {}
+        c = None if codec is None else get_codec(codec)
 
         def _units(j: int) -> int:
             if units is None:
@@ -659,17 +695,39 @@ class Transport:
             return int(units)
 
         for j, payload in payloads.items():
-            env = WireEnvelope.seal(tag, j, payload)
+            if c is None:
+                env = WireEnvelope.seal(tag, j, payload)
+                blob = None
+                bits_j = UNIT_BITS * _units(j)
+            else:
+                arr = np.asarray(payload)
+                blob = (encoded[j] if encoded is not None and j in encoded
+                        else c.encode(arr))
+                env = WireEnvelope.seal_bytes(tag, j, blob)
+                bits_j = 8 * len(blob)
             attempts = 0
             while True:
                 fate = plan.silent_fate(tag, j, attempts)
                 attempts += 1
-                wire = (payload if fate is None
-                        else perturb_payload(payload, *fate))
                 if fate is not None:
                     stats.silent_corrupts += 1
-                if not self.verify or env.verify(wire):
-                    delivered[j] = wire
+                if c is None:
+                    out = (payload if fate is None
+                           else perturb_payload(payload, *fate))
+                    ok = not self.verify or env.verify(out)
+                else:
+                    if fate is None:
+                        wire_blob = blob
+                        out = (payload if c.exact_for(arr.dtype)
+                               else c.decode(blob, arr.shape, arr.dtype))
+                    else:
+                        p = perturb_payload(arr, *fate)
+                        wire_blob = c.encode(p)
+                        out = c.decode(wire_blob, p.shape, p.dtype)
+                    ok = (not self.verify
+                          or env.verify(np.frombuffer(wire_blob, np.uint8)))
+                if ok:
+                    delivered[j] = out
                     break
                 stats.silent_detected += 1
                 # detected corruption: the bytes still crossed the link
@@ -677,10 +735,11 @@ class Transport:
                 if ledger is not None:
                     rtag = f"retry/{tag}"
                     if down:
-                        ledger.server_to_party(rtag, j, u)
+                        ledger.server_to_party(rtag, j, u, bits_j)
                     else:
-                        ledger.party_to_server(rtag, j, u)
+                        ledger.party_to_server(rtag, j, u, bits_j)
                 stats.units_retried += u
+                stats.bits_retried += bits_j
                 if attempts > retries_cap:
                     stats.exhausted += 1
                     if drop_on_exhaust:
@@ -706,7 +765,8 @@ def deliver_or_record(
     if transport is None:
         schedule.record(ledger)
         return DeliveryReport(units_base=schedule.total, units_retried=0,
-                              retries=0, failed={}, sim_time_s=0.0)
+                              retries=0, failed={}, sim_time_s=0.0,
+                              bits_base=schedule.total_bits)
     return transport.deliver(schedule, ledger, max_retries=max_retries,
                              drop_on_exhaust=drop_on_exhaust)
 

@@ -12,7 +12,11 @@ partitioned systems.  This module supplies three independent defenses:
   :class:`~repro.core.faults.Transport`.  Detected mismatches are
   retransmitted and billed under the exact ``retry/<tag>`` accounting the
   fault seam already uses.  This catches TRANSPORT-level corruption (bit
-  flips on the wire); it cannot catch a lying sender who re-seals.
+  flips on the wire); it cannot catch a lying sender who re-seals.  When a
+  :mod:`repro.core.wire` codec compresses the payload, the envelope seals
+  the ENCODED bytes (:meth:`WireEnvelope.seal_bytes`): the CRC covers the
+  compressed payload — per-block scales and quantized words alike — so
+  detection is independent of the codec's numeric tolerance.
 * Value-level validators (:func:`check_mass_table`, :func:`check_weights`,
   :func:`check_merge_children`) — host-side numpy checks at every
   accumulation seam: mass tables finite and nonnegative, row sums
@@ -83,6 +87,13 @@ class WireEnvelope:
         arr = np.asarray(payload)
         return WireEnvelope(tag, int(party), tuple(arr.shape),
                             str(arr.dtype), payload_digest(arr))
+
+    @staticmethod
+    def seal_bytes(tag: str, party: int, blob: bytes) -> "WireEnvelope":
+        """Seal a codec's packed byte string (the compressed-wire form:
+        the digest covers the ENCODED payload, so verify against the
+        received blob's uint8 view)."""
+        return WireEnvelope.seal(tag, party, np.frombuffer(blob, np.uint8))
 
     def mismatch(self, payload: Any) -> Optional[str]:
         """Why the received payload fails verification, or None if it
@@ -176,14 +187,17 @@ def require_valid_masses(
     bound: Optional[float] = None,
     tag: str = "dis/round1/G_j",
     policy: str = "fail",
+    rel_tol: float = 1e-4,
 ) -> Tuple[int, ...]:
     """Run the mass-table validators under a fault policy.
 
     Under ``"quarantine"`` the sorted offender set is returned for the
     caller's degrade machinery; under any other policy the first finding
     raises a party-attributed :exc:`IntegrityError`.  Clean data returns
-    ``()`` either way."""
-    findings = check_mass_table(masses, totals, bound=bound)
+    ``()`` either way.  ``rel_tol`` widens the row-sum/scalar cross-check
+    for quantized wire tables (the caller knows the codec's tolerance);
+    the finiteness/nonnegativity/bound checks are tolerance-independent."""
+    findings = check_mass_table(masses, totals, bound=bound, rel_tol=rel_tol)
     if not findings:
         return ()
     if policy == "quarantine":

@@ -48,6 +48,14 @@ import numpy as np
 
 from repro.core.comm import CommSchedule
 from repro.core.vfl import VFLDataset, block_geometry
+from repro.core.wire import (
+    CODEC_LADDER,
+    SPEC_CODECS,
+    choose_codec,
+    fmt_bits,
+    predict_dis_bits,
+    predict_uniform_bits,
+)
 
 SCORE_BACKENDS = ("pallas", "ref", "norm")
 
@@ -64,6 +72,14 @@ FAULT_POLICIES = ("fail", "retry", "degrade", "quarantine")
 # the per-dispatch overhead, shallow enough that two prefetch slots + one
 # resident superchunk stay a small multiple of the single-block footprint
 DEFAULT_CHUNK_BLOCKS = 8
+
+#: Measured-winner prefetch default per backend.  BENCH_kernels.json's
+#: streaming sweep: on CPU the host thread that feeds the prefetch slot
+#: competes with the compute it overlaps — noprefetch wins (918,245 rows/s
+#: vs 690,124 with prefetch on).  On accelerators the staging copy runs on
+#: the transfer engine while compute owns the cores, so prefetch wins.
+#: Backends outside the table default to prefetching (accelerator-like).
+PREFETCH_DEFAULT = {"cpu": False, "tpu": True, "gpu": True}
 
 # pipelined peak model: two double-buffered staging slots + the live compute
 # residency of one superchunk.  BENCH_kernels.json's streaming_pipelined
@@ -111,6 +127,8 @@ class CoresetSpec:
     sharded_masses: bool = False          # mass table via shard_map over `data`
     m_cap: Optional[int] = None           # batched draw capacity override
     fault_policy: str = "fail"            # fail | retry | degrade | quarantine
+    codec: str = "raw_fp32"               # wire codec, or "auto" (planner)
+    comm_budget_bits: Optional[int] = None
     params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self) -> None:
@@ -200,6 +218,29 @@ class CoresetSpec:
                 f"fault_policy={self.fault_policy!r} delivers per-round "
                 f"schedules through a transport; the batched engine bills "
                 f"its cells lazily and cannot combine with it"
+            )
+        if self.codec not in SPEC_CODECS:
+            raise ValueError(
+                f"codec must be one of {SPEC_CODECS}, got {self.codec!r}"
+            )
+        lossy = self.codec not in ("auto", "raw_fp32")
+        if lossy and self.jit:
+            raise ValueError(
+                f"codec={self.codec!r} quantizes the wire; the jit fused "
+                f"path never leaves the device and cannot combine with it"
+            )
+        if lossy and self.engine == "batched":
+            raise ValueError(
+                f"codec={self.codec!r} quantizes per-round payloads; the "
+                f"batched engine bills its cells lazily and cannot combine "
+                f"with it"
+            )
+        if self.comm_budget_bits is not None and (
+                not _is_int(self.comm_budget_bits)
+                or self.comm_budget_bits < 1):
+            raise ValueError(
+                f"comm_budget_bits must be a positive int, "
+                f"got {self.comm_budget_bits!r}"
             )
         object.__setattr__(self, "params", dict(self.params))
 
@@ -378,6 +419,14 @@ class ExecutionPlan:
     memory_model: Mapping[str, int]
     predicted_peak_bytes: int
     predicted_comm_units: int
+    #: Resolved wire codec (never ``"auto"``) and its predicted bill in
+    #: bits.  Exact for ``raw_fp32`` (32 bits/unit); a certified upper
+    #: bound for codecs with varint index uploads.  ``comm_budget_exceeded``
+    #: flags a plan whose cheapest admissible codec still overshoots
+    #: ``spec.comm_budget_bits`` — recorded, never silently dropped.
+    codec: str = "raw_fp32"
+    predicted_wire_bits: int = 0
+    comm_budget_exceeded: bool = False
     budget_exceeded: bool = False
     notes: Tuple[str, ...] = ()
     #: Ordered engines to retry on if this plan's engine crashes or breaches
@@ -437,7 +486,19 @@ class ExecutionPlan:
                 f"{self.engine} (predicted peak "
                 f"{_fmt_bytes(self.predicted_peak_bytes)}, {verdict})"
             )
-        lines.append(f"  predicted comm: {self.predicted_comm_units} units")
+        lines.append(
+            f"  predicted comm: {self.predicted_comm_units} units "
+            f"({fmt_bits(self.predicted_wire_bits)} on the wire, "
+            f"codec={self.codec})"
+        )
+        if spec.comm_budget_bits is not None:
+            verdict = ("EXCEEDS budget — no admissible codec fits"
+                       if self.comm_budget_exceeded else "fits")
+            lines.append(
+                f"  comm budget: {fmt_bits(spec.comm_budget_bits)} -> "
+                f"{self.codec} ({fmt_bits(self.predicted_wire_bits)}, "
+                f"{verdict})"
+            )
         for note in self.notes:
             lines.append(f"  note: {note}")
         return "\n".join(lines)
@@ -456,7 +517,7 @@ class ExecutionPlan:
 PLAN_KEY_FIELDS = (
     "engine", "backend", "jit", "budgets", "num_seeds", "block_size",
     "chunk_blocks", "prefetch", "memory_budget_bytes", "sharded_masses",
-    "m_cap", "fault_policy",
+    "m_cap", "fault_policy", "codec", "comm_budget_bits",
 )
 
 #: Spec fields deliberately excluded from the cache key, each with the
@@ -627,8 +688,14 @@ def compile_plan(spec: CoresetSpec, ds: VFLDataset) -> ExecutionPlan:
     chunk_req = (DEFAULT_CHUNK_BLOCKS if spec.chunk_blocks is None
                  else int(spec.chunk_blocks))
     chunk = min(chunk_req, nb)
-    prefetch = (jax.default_backend() in ("tpu", "gpu")
-                if spec.prefetch is None else bool(spec.prefetch))
+    # prefetch default = the measured winner per backend, NOT "accelerator
+    # => on" folklore.  BENCH_kernels.json streaming sweep on CPU:
+    # 918,245 rows/s without prefetch vs 690,124 with it — the host thread
+    # feeding the staging slot steals the cores the compute needs.
+    if spec.prefetch is None:
+        prefetch = PREFETCH_DEFAULT.get(jax.default_backend(), True)
+    else:
+        prefetch = bool(spec.prefetch)
 
     mm = memory_model(T, n, s, bs, chunk, R, M, m_cap, scored=not uniform)
 
@@ -730,6 +797,51 @@ def compile_plan(spec: CoresetSpec, ds: VFLDataset) -> ExecutionPlan:
 
     comm = R * sum(_cell_comm(T, m, uniform) for m in spec.budgets)
 
+    # -- wire codec resolution (the comm-budget axis) ------------------------
+    # The round-1 mass table a party uploads has one entry per scoring cell:
+    # the full n-row table on the materialized/batched paths, the nb
+    # block-mass table on the streaming engines.  Bits are exact for every
+    # shape-determined message; varint uploads contribute their certified
+    # upper bound, so the prediction is a ceiling the realized bill never
+    # crosses.
+    cells = n if engine in ("materialized", "batched") else nb
+    lossless_only = spec.jit or engine == "batched"
+    if spec.codec not in ("auto", "raw_fp32") and lossless_only:
+        raise ValueError(
+            f"codec={spec.codec!r} quantizes per-round payloads, but the "
+            f"planner selected the "
+            f"{'jit fused' if spec.jit else 'batched'} path — use "
+            f"codec='raw_fp32' or a transported engine"
+        )
+
+    def _predict(name: str) -> int:
+        if uniform:
+            return R * sum(predict_uniform_bits(T, m) for m in spec.budgets)
+        return R * sum(predict_dis_bits(T, m, cells, name)
+                       for m in spec.budgets)
+
+    if spec.codec == "auto" and lossless_only:
+        # the only admissible codec on a never-leaves-device path
+        codec, wire_bits = "raw_fp32", _predict("raw_fp32")
+        comm_budget_exceeded = (
+            spec.comm_budget_bits is not None
+            and wire_bits > spec.comm_budget_bits
+        )
+        if comm_budget_exceeded:
+            notes.append(
+                f"comm budget {spec.comm_budget_bits}b unmeetable: the "
+                f"{'jit' if spec.jit else 'batched'} path admits only "
+                f"raw_fp32 ({wire_bits}b predicted)"
+            )
+    else:
+        bits_by_codec = {name: _predict(name) for name in CODEC_LADDER}
+        codec, comm_budget_exceeded, codec_note = choose_codec(
+            spec.codec, spec.comm_budget_bits, bits_by_codec
+        )
+        wire_bits = bits_by_codec[codec]
+        if codec_note:
+            notes.append(codec_note)
+
     # failover ladder: the cheaper engines after the chosen one.  jit and
     # sharded_masses bind the spec to specific engines (validated above), so
     # those plans pin their engine and never failover.
@@ -749,6 +861,9 @@ def compile_plan(spec: CoresetSpec, ds: VFLDataset) -> ExecutionPlan:
         memory_model=mm,
         predicted_peak_bytes=mm[engine],
         predicted_comm_units=comm,
+        codec=codec,
+        predicted_wire_bits=wire_bits,
+        comm_budget_exceeded=comm_budget_exceeded,
         budget_exceeded=budget_exceeded,
         notes=tuple(notes),
         fallback_chain=fallback,

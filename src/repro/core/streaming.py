@@ -162,6 +162,26 @@ def make_stream_scorer(
                    masses=masses, ckpt=ckpt, **params)
 
 
+def with_masses(scorer: StreamScorer, masses) -> StreamScorer:
+    """``scorer`` with its block-mass table swapped for the DELIVERED one.
+
+    The wire seam's hook: when the round-1 table crossed a transport — a
+    lossy codec's quantized copy, or a corrupted one an unverifying
+    transport let through — the hierarchical sampler must draw from what
+    arrived, not the honest host table.  The per-row scores the redraw
+    recomputes are untouched; only the block-selection marginals change.
+    The table is cast to the scorer's mass dtype so downstream weight
+    arithmetic keeps its precision contract."""
+    tbl = jnp.asarray(
+        np.asarray(masses).astype(np.asarray(scorer.masses).dtype))
+    if tbl.shape != scorer.masses.shape:
+        raise ValueError(
+            f"delivered mass table has shape {tbl.shape}; the scorer's "
+            f"is {scorer.masses.shape}"
+        )
+    return dataclasses.replace(scorer, masses=tbl)
+
+
 def _noop() -> None:
     return None
 

@@ -1,0 +1,48 @@
+"""repro.core.wire — the bit-level compressed wire subsystem.
+
+Three modules under one namespace:
+
+* :mod:`~repro.core.wire.codecs` — the codec registry: named packed-byte
+  formats (``raw_fp32`` / ``fp16`` / ``int8_blockscale`` mass tables,
+  ``delta_varint`` index uploads) with measured ``wire_bits``;
+* :mod:`~repro.core.wire.payload` — :class:`WirePayload` descriptors that
+  ride on ``CommSchedule`` ops so the ledger's bits column bills the
+  bytes :meth:`Transport.ship` actually seals;
+* :mod:`~repro.core.wire.budget` — plan-time bit prediction and the
+  ``comm_budget_bits`` codec walk.
+
+Everything here is numpy-only and imports nothing from the rest of
+``repro.core`` — it is the layer below the ledger.
+"""
+
+from repro.core.wire.budget import (
+    choose_codec,
+    predict_dis_bits,
+    predict_uniform_bits,
+)
+from repro.core.wire.codecs import (
+    CODEC_LADDER,
+    INT8_BLOCK,
+    SPEC_CODECS,
+    UNIT_BITS,
+    WIRE_CODECS,
+    Codec,
+    get_codec,
+)
+from repro.core.wire.payload import WirePayload, encode_payloads, fmt_bits
+
+__all__ = [
+    "CODEC_LADDER",
+    "Codec",
+    "INT8_BLOCK",
+    "SPEC_CODECS",
+    "UNIT_BITS",
+    "WIRE_CODECS",
+    "WirePayload",
+    "choose_codec",
+    "encode_payloads",
+    "fmt_bits",
+    "get_codec",
+    "predict_dis_bits",
+    "predict_uniform_bits",
+]

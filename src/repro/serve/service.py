@@ -58,6 +58,7 @@ from repro.core.faults import (
 )
 from repro.core.integrity import IntegrityError
 from repro.core.plan import PlanCache
+from repro.core.wire import fmt_bits
 from repro.core.vfl import VFLDataset
 from repro.serve.resilience import CircuitBreaker, ShedReceipt, TokenBucket
 from repro.serve.tree import CoresetTree, InsertStats
@@ -74,6 +75,9 @@ class InsertReceipt:
     #: engine failover trail of the leaf build ("pipelined->streamed"), or
     #: None when the planned engine succeeded
     fallback: Optional[str] = None
+    #: tenant's composed wire bill in bits after the insert (the bytes the
+    #: codecs actually moved behind ``ledger_total``'s paper units)
+    ledger_bits: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +94,9 @@ class QueryReceipt:
     #: comm units this query added to the tenant's ledger (the reduce's
     #: bill; 0 for union/degraded queries)
     comm_delta: int = 0
+    #: tenant's composed wire bill in bits, and this query's bit delta
+    ledger_bits: int = 0
+    comm_delta_bits: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +107,7 @@ class EvictReceipt:
     ledger_total: int           # final composed bill at eviction
     #: the tenant's not-yet-flushed submit requests dropped at evict time
     dropped_pending: int = 0
+    ledger_bits: int = 0        # final composed wire bill at eviction
 
 
 @dataclasses.dataclass
@@ -286,7 +294,8 @@ class CoresetService:
         return EvictReceipt(tenant=tenant, chunks=st.tree.num_chunks,
                             rows=st.tree.n_total,
                             ledger_total=st.ledger.total,
-                            dropped_pending=dropped)
+                            dropped_pending=dropped,
+                            ledger_bits=st.ledger.total_bits)
 
     # -- streaming path ------------------------------------------------------
 
@@ -365,6 +374,7 @@ class CoresetService:
             plan_hit=self.plan_cache.hits > hits0,
             latency_s=time.perf_counter() - t0,
             fallback=stats.fallback,
+            ledger_bits=st.ledger.total_bits,
         )
 
     def query(self, tenant: str, *, reduce_to: Optional[int] = None,
@@ -384,6 +394,7 @@ class CoresetService:
         if shed is not None:
             return shed
         led0 = st.ledger.total
+        bits0 = st.ledger.total_bits
         mark = st.ledger.mark()
         degraded = False
         self._inflight += 1
@@ -412,7 +423,9 @@ class CoresetService:
                             ledger_total=st.ledger.total,
                             latency_s=time.perf_counter() - t0,
                             degraded=degraded,
-                            comm_delta=st.ledger.total - led0)
+                            comm_delta=st.ledger.total - led0,
+                            ledger_bits=st.ledger.total_bits,
+                            comm_delta_bits=st.ledger.total_bits - bits0)
 
     # -- cross-tenant batched builds -----------------------------------------
 
@@ -538,6 +551,11 @@ class CoresetService:
             "health_warnings": sum(st.tree.health_warnings
                                    for st in self._tenants.values()),
             "sheds": sum(st.sheds for st in self._tenants.values()),
+            "wire_bits": sum(st.ledger.total_bits
+                             for st in self._tenants.values()),
+            "wire_bits_by_tenant": {name: st.ledger.total_bits
+                                    for name, st
+                                    in sorted(self._tenants.items())},
             "fallbacks": sum(st.tree.fallbacks
                              for st in self._tenants.values()),
             "breakers": {name: st.breaker.stats()
@@ -567,6 +585,7 @@ class CoresetService:
             lines.append(
                 f"  {name}: task={t.task.name} budget={t.budget} "
                 f"chunks={t.num_chunks} rows={t.n_total} height={t.height} "
-                f"comm={st.ledger.total}{extra}"
+                f"comm={st.ledger.total} "
+                f"({fmt_bits(st.ledger.total_bits)} on the wire){extra}"
             )
         return "\n".join(lines)

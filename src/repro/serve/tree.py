@@ -58,6 +58,7 @@ from repro.core.faults import StreamCheckpoint, Transport, deliver_or_record
 from repro.core.integrity import HealthReport, check_merge_children
 from repro.core.plan import CoresetSpec, PlanCache
 from repro.core.vfl import VFLDataset
+from repro.core.wire import WirePayload, fmt_bits
 
 
 def merge_reduce(
@@ -138,7 +139,11 @@ def merge_reduce(
             raise ValueError("DIS requires a positive total score")
         S = np.asarray(plan.indices)
         weights = np.asarray(plan.weights) * union.weights[S]
-        schedule = CommSchedule.dis(T, m, counts=np.asarray(plan.counts))
+        # the merge re-score's round-1 G_j physically carries one float32
+        # mass per union row — bill those bits, not just the paper scalar
+        schedule = CommSchedule.dis(
+            T, m, counts=np.asarray(plan.counts),
+            round1_payload=WirePayload.of((ds_u.n,), "float32", "raw_fp32"))
 
     if bill_consume:
         sizes = [mt.m for mt in mats]
@@ -156,6 +161,7 @@ def merge_reduce(
         parts=[p[S] for p in union.parts],
         y=None if union.y is None else union.y[S],
         comm_units=union.comm_units + rep.units,
+        comm_bits=union.comm_bits + rep.bits,
     )
 
 
@@ -481,7 +487,8 @@ class CoresetTree:
             f"(nodes keep {self.node_budget}) "
             f"chunks={self.num_chunks} rows={self.n_total}",
             f"  height={self.height} nodes={self.num_nodes} "
-            f"m_active={self.m_active} comm={self.ledger.total}",
+            f"m_active={self.m_active} comm={self.ledger.total} "
+            f"({fmt_bits(self.ledger.total_bits)} on the wire)",
         ]
         if self.health_checks:
             status = ("ok" if self.last_health is None
